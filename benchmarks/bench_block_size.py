@@ -1,0 +1,40 @@
+"""Paper Fig. 5 / Table 1: SC assembly time (and FLOP model) vs the
+block-size hyperparameter, 2D and 3D, small and large subdomains.
+
+Reproduces the paper's finding that a fixed block *size* (not count) is
+the right parameterization and that the optimum is flat/insensitive once
+blocks are big enough to keep level-3 kernels efficient.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import SchurAssemblyConfig, assembly_flops, make_assembler
+from benchmarks.common import emit, subdomain_problem, time_fn
+
+
+def run(sizes_2d=(16, 24), sizes_3d=(6, 9),
+        block_sizes=(16, 32, 64, 128), reps: int = 3) -> list[tuple]:
+    rows = []
+    for dim, sizes in ((2, sizes_2d), (3, sizes_3d)):
+        for e in sizes:
+            for bs in block_sizes:
+                prob = subdomain_problem(dim, e, bs)
+                cfg = SchurAssemblyConfig(block_size=bs, rhs_block_size=bs)
+                fn = jax.jit(make_assembler(prob["meta"], cfg, prob["mask"]))
+                us = time_fn(fn, jax.numpy.asarray(prob["L"]),
+                             jax.numpy.asarray(prob["Bt"]), reps=reps)
+                fl = assembly_flops(prob["meta"], cfg)["total"]
+                rows.append((
+                    f"blocksize/{dim}d/n{prob['n']}/bs{bs}", us,
+                    f"flops={fl}",
+                ))
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Paper Figs. 9 & 10: FETI preprocessing across dual-operator approaches
+and the amortization points.
+
+Approaches benchmarked (paper Table 2, mapped to this framework):
+  impl            — numerical factorization only (implicit dual op)
+  expl_dense      — factorization + dense §3.1 SC assembly   (= expl_cuda)
+  expl_opt        — factorization + sparsity-utilizing SC    (= expl_gpu_opt)
+
+Amortization point = preprocessing overhead / per-iteration saving
+(implicit TRSV pair vs explicit GEMV), reported per subdomain size — the
+paper's headline claim is ≈10 iterations, flat across sizes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SchurAssemblyConfig
+from repro.fem import decompose_heat_problem
+from repro.feti import FetiSolver
+from repro.feti.assembly import preprocess_cluster
+from repro.feti.operator import explicit_dual_apply, implicit_dual_apply
+from benchmarks.common import emit, time_fn
+
+
+def run(cases=((2, (2, 2), (8, 8)), (2, (2, 2), (16, 16)),
+               (3, (2, 2, 1), (4, 4, 4)), (3, (2, 2, 1), (6, 6, 6))),
+        bs: int = 16, reps: int = 3) -> list[tuple]:
+    rows = []
+    for dim, grid, eps in cases:
+        prob = decompose_heat_problem(dim, grid, eps)
+        n = prob.subdomains[0].n
+        tag = f"{dim}d/n{n}"
+        cfg_opt = SchurAssemblyConfig(block_size=bs, rhs_block_size=bs)
+        cfg_dense = SchurAssemblyConfig(trsm_variant="dense",
+                                        syrk_variant="dense",
+                                        block_size=bs, rhs_block_size=bs,
+                                        prune=False)
+
+        import numpy as np
+
+        from repro.feti.assembly import make_cluster_preprocessor
+        from repro.fem.regularization import fixing_node_regularization
+
+        def preprocess_time(cfg, explicit):
+            """Time the COMPILED preprocessing (pattern fixed, values new —
+            the paper's multi-step regime)."""
+            static, prep = make_cluster_preprocessor(prob, cfg,
+                                                     explicit=explicit)
+            np_ = static["node_perm"]
+            Kp = np.stack([
+                fixing_node_regularization(sd.K, sd.fixing_node)[np_][:, np_]
+                for sd in prob.subdomains
+            ])
+            Btp = np.stack([sd.Bt[np_] for sd in prob.subdomains])
+            Kj, Bj = jnp.asarray(Kp), jnp.asarray(Btp)
+            us = time_fn(lambda a, b: prep(a, b)[0 if not explicit else 1],
+                         Kj, Bj, reps=reps)
+            st = preprocess_cluster(prob, cfg, explicit=explicit)
+            return st, us
+
+        st_impl, t_impl = preprocess_time(cfg_opt, explicit=False)
+        _, t_expl_dense = preprocess_time(cfg_dense, explicit=True)
+        st_expl, t_expl_opt = preprocess_time(cfg_opt, explicit=True)
+        rows.append((f"feti/{tag}/preproc_impl", t_impl, ""))
+        rows.append((f"feti/{tag}/preproc_expl_dense", t_expl_dense,
+                     f"slowdown_vs_impl={t_expl_dense / t_impl:.2f}"))
+        rows.append((f"feti/{tag}/preproc_expl_opt", t_expl_opt,
+                     f"slowdown_vs_impl={t_expl_opt / t_impl:.2f}"))
+
+        # per-iteration dual operator application
+        nl = prob.n_lambda
+        lam = jnp.zeros((nl,))
+        imp = jax.jit(lambda p: implicit_dual_apply(
+            st_impl.L, st_impl.Btp, st_impl.lambda_ids, nl, p))
+        exp = jax.jit(lambda p: explicit_dual_apply(
+            st_expl.F, st_expl.lambda_ids, nl, p))
+        t_it_imp = time_fn(imp, lam, reps=reps)
+        t_it_exp = time_fn(exp, lam, reps=reps)
+        overhead = t_expl_opt - t_impl
+        gain = t_it_imp - t_it_exp
+        amort = overhead / gain if gain > 0 else float("inf")
+        rows.append((f"feti/{tag}/iter_implicit", t_it_imp, ""))
+        rows.append((f"feti/{tag}/iter_explicit", t_it_exp,
+                     f"amortization_iters={amort:.1f}"))
+
+        # end-to-end sanity: solve and report iterations
+        sol = FetiSolver(prob, cfg_opt).solve(tol=1e-8, max_iter=500)
+        rows.append((f"feti/{tag}/pcpg_iterations", float(sol.iterations),
+                     f"converged={sol.converged}"))
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Paper Fig. 7: pure TRSM and SYRK kernel speedup of the sparsity-
+utilizing variants over the dense baseline, across subdomain sizes.
+
+Two speedup columns per row:
+  * measured (CPU wall time, relative),
+  * FLOP-model (transfers to the TPU target; the paper's theoretical
+    ceiling for a perfect triangle is 3.0 for both kernels).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    syrk_dense,
+    syrk_input_split,
+    trsm_dense,
+    trsm_factor_split,
+)
+from benchmarks.common import emit, subdomain_problem, time_fn
+
+
+def run(sizes_2d=(12, 16, 24, 32), sizes_3d=(5, 7, 9, 11), bs: int = 32,
+        reps: int = 3) -> list[tuple]:
+    rows = []
+    for dim, sizes in ((2, sizes_2d), (3, sizes_3d)):
+        for e in sizes:
+            prob = subdomain_problem(dim, e, bs)
+            L = jnp.asarray(prob["L"])
+            Bp = jnp.asarray(prob["Bt"][:, prob["meta"].perm])
+            meta, mask = prob["meta"], prob["mask"]
+            tag = f"{dim}d/n{prob['n']}/m{prob['m']}"
+
+            t_dense = time_fn(jax.jit(trsm_dense), L, Bp, reps=reps)
+            t_opt = time_fn(
+                jax.jit(lambda l, b: trsm_factor_split(l, b, meta,
+                                                       block_mask=mask)),
+                L, Bp, reps=reps,
+            )
+            fl_speed = meta.flops_trsm_dense() / max(
+                meta.flops_trsm_factor_split(), 1
+            )
+            rows.append((f"kernels/{tag}/trsm", t_opt,
+                         f"speedup_measured={t_dense / t_opt:.2f}"
+                         f";speedup_flops={fl_speed:.2f}"))
+
+            Y = trsm_dense(L, Bp)
+            s_dense = time_fn(jax.jit(syrk_dense), Y, reps=reps)
+            s_opt = time_fn(jax.jit(lambda y: syrk_input_split(y, meta)), Y,
+                            reps=reps)
+            sfl = meta.flops_syrk_dense() / max(
+                meta.flops_syrk_input_split(), 1
+            )
+            rows.append((f"kernels/{tag}/syrk", s_opt,
+                         f"speedup_measured={s_dense / s_opt:.2f}"
+                         f";speedup_flops={sfl:.2f}"))
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

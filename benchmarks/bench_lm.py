@@ -1,0 +1,50 @@
+"""LM-side microbenchmarks: smoke-scale train/decode step times per
+architecture family (the full-scale numbers live in the dry-run roofline,
+results/dryrun.jsonl)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config, list_archs
+from repro.data import synthetic_batch
+from repro.models import init_cache, init_model
+from repro.train import (
+    OptimizerConfig,
+    TrainConfig,
+    adamw_init,
+    make_decode_step,
+    make_train_step,
+)
+from benchmarks.common import emit, time_fn
+
+
+def run(reps: int = 3) -> list[tuple]:
+    rows = []
+    archs = [a for a in list_archs() if not a.startswith("feti")]
+    for arch in archs:
+        cfg = get_smoke_config(arch)
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        batch = synthetic_batch(cfg, 4, 32, seed=0)
+        tcfg = TrainConfig(optimizer=OptimizerConfig(), remat=False)
+        step = jax.jit(make_train_step(cfg, tcfg))
+        opt = adamw_init(params, tcfg.optimizer)
+        us = time_fn(lambda p, o, b: step(p, o, b)[2]["loss"], params, opt,
+                     batch, reps=reps)
+        rows.append((f"lm/{arch}/train_step_smoke", us, ""))
+        if not cfg.is_encoder_only:
+            cache = init_cache(cfg, 4, 64)
+            dec = jax.jit(make_decode_step(cfg))
+            tok = jnp.zeros((4, 1), jnp.int32)
+            us = time_fn(lambda *a: dec(*a)[0], params, tok, cache,
+                         jnp.asarray(0, jnp.int32), reps=reps)
+            rows.append((f"lm/{arch}/decode_step_smoke", us, ""))
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

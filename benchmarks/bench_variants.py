@@ -1,0 +1,77 @@
+"""Paper Fig. 6: comparison of the TRSM splitting variants (RHS vs factor,
+with/without pruning) and the SYRK variants (input vs output splitting),
+across subdomain sizes. Reports wall time and the FLOP model per variant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    SchurAssemblyConfig,
+    syrk_dense,
+    syrk_input_split,
+    syrk_output_split,
+    trsm_dense,
+    trsm_factor_split,
+    trsm_rhs_split,
+)
+from benchmarks.common import emit, subdomain_problem, time_fn
+
+
+def run(sizes_2d=(16, 24), sizes_3d=(6, 9), bs: int = 32,
+        reps: int = 3) -> list[tuple]:
+    rows = []
+    for dim, sizes in ((2, sizes_2d), (3, sizes_3d)):
+        for e in sizes:
+            prob = subdomain_problem(dim, e, bs)
+            L = jnp.asarray(prob["L"])
+            Bp = jnp.asarray(prob["Bt"][:, prob["meta"].perm])
+            meta, mask = prob["meta"], prob["mask"]
+            tag = f"{dim}d/n{prob['n']}"
+
+            trsm_variants = {
+                "trsm_dense": jax.jit(trsm_dense),
+                "trsm_rhs": jax.jit(lambda l, b: trsm_rhs_split(l, b, meta)),
+                "trsm_factor": jax.jit(
+                    lambda l, b: trsm_factor_split(l, b, meta)
+                ),
+                "trsm_factor_prune": jax.jit(
+                    lambda l, b: trsm_factor_split(l, b, meta, block_mask=mask)
+                ),
+            }
+            flops = {
+                "trsm_dense": meta.flops_trsm_dense(),
+                "trsm_rhs": meta.flops_trsm_rhs_split(),
+                "trsm_factor": meta.flops_trsm_factor_split(),
+                "trsm_factor_prune": meta.flops_trsm_factor_split(),
+            }
+            for name, fn in trsm_variants.items():
+                us = time_fn(fn, L, Bp, reps=reps)
+                rows.append((f"variants/{tag}/{name}", us,
+                             f"flops={flops[name]}"))
+
+            Y = trsm_dense(L, Bp)
+            syrk_variants = {
+                "syrk_dense": jax.jit(syrk_dense),
+                "syrk_input": jax.jit(lambda y: syrk_input_split(y, meta)),
+                "syrk_output": jax.jit(lambda y: syrk_output_split(y, meta)),
+            }
+            sflops = {
+                "syrk_dense": meta.flops_syrk_dense(),
+                "syrk_input": meta.flops_syrk_input_split(),
+                "syrk_output": meta.flops_syrk_output_split(),
+            }
+            for name, fn in syrk_variants.items():
+                us = time_fn(fn, Y, reps=reps)
+                rows.append((f"variants/{tag}/{name}", us,
+                             f"flops={sflops[name]}"))
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

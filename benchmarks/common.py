@@ -1,0 +1,91 @@
+"""Shared benchmark utilities: timing, problem factories, CSV emission.
+
+CPU wall-times here are *relative* measurements (the paper's A100 numbers
+are not reproducible on this container); every table also reports the
+FLOP-model-derived numbers that transfer to the TPU target.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # the FETI substrate benches are
+#                                            f64 (paper's CPU/GPU regime);
+#                                            LM benches pass explicit dtypes
+
+import numpy as np
+
+from repro.core import SchurAssemblyConfig, build_stepped_meta
+from repro.fem import (
+    assemble_dense,
+    p1_element_stiffness,
+    structured_mesh,
+)
+from repro.fem.regularization import fixing_node_regularization
+from repro.sparse import (
+    block_pattern,
+    block_symbolic_cholesky,
+    matrix_pattern_from_elems,
+    nested_dissection_order,
+)
+from repro.sparse.cholesky import block_cholesky
+from repro.testing import random_feti_like_bt
+
+__all__ = ["time_fn", "subdomain_problem", "emit", "HEADER"]
+
+HEADER = "name,us_per_call,derived"
+
+
+def time_fn(fn: Callable, *args, reps: int = 5, warmup: int = 1) -> float:
+    """Median wall-time (µs) of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def subdomain_problem(dim: int, elems_per_axis: int, block_size: int,
+                      rhs_block_size: int | None = None, seed: int = 0):
+    """One FETI-like subdomain: K_reg (ND-permuted), its factor L, B̃ᵀ in
+    factor row order, stepped metadata, and the symbolic block mask."""
+    shape = (elems_per_axis,) * dim
+    mesh = structured_mesh(shape)
+    n = mesh.n_nodes
+    Ke = p1_element_stiffness(mesh.coords, mesh.elems)
+    K = np.asarray(assemble_dense(mesh.n_nodes, mesh.elems, Ke))
+    K = fixing_node_regularization(K, fixing_node=n // 2)
+    node_shape = tuple(s + 1 for s in shape)
+    perm = nested_dissection_order(node_shape)
+    Kp = K[perm][:, perm]
+    pat = matrix_pattern_from_elems(n, mesh.elems)[perm][:, perm]
+    mask = block_symbolic_cholesky(block_pattern(pat, block_size))
+    L = np.asarray(block_cholesky(jax.numpy.asarray(Kp), block_size, mask=mask))
+
+    # surface multipliers: ~one per boundary node (FETI-like density)
+    rng = np.random.default_rng(seed)
+    # boundary nodes of the box
+    grid = np.meshgrid(*[np.arange(s + 1) for s in shape], indexing="ij")
+    idx = np.stack([g.ravel(order="F") for g in grid], axis=1)
+    on_surf = np.any((idx == 0) | (idx == np.array(shape)), axis=1)
+    surf = np.flatnonzero(on_surf)
+    # map to permuted row ids
+    inv = np.empty(n, np.int64)
+    inv[perm] = np.arange(n)
+    rows = inv[surf]
+    m = len(rows)
+    Bt = np.zeros((n, m))
+    Bt[rows, np.arange(m)] = rng.choice([-1.0, 1.0], m)
+    meta = build_stepped_meta(Bt != 0, block_size=block_size,
+                              rhs_block_size=rhs_block_size or block_size)
+    return dict(n=n, m=m, K=Kp, L=L, Bt=Bt, meta=meta, mask=mask)
+
+
+def emit(rows: list[tuple]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

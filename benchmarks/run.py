@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only <name>]
+
+Emits ``name,us_per_call,derived`` CSV rows. Mapping to the paper:
+    bench_block_size  — Fig. 5 / Table 1 (block-size hyperparameter)
+    bench_variants    — Fig. 6 (TRSM/SYRK splitting variants + pruning)
+    bench_kernels     — Fig. 7 (pure-kernel speedups vs dense baseline)
+    bench_assembly    — Fig. 8 (whole SC assembly, sep/mix)
+    bench_feti        — Figs. 9 & 10 (FETI preprocessing + amortization)
+    bench_lm          — assigned-architecture step smoke timings
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import HEADER
+
+MODULES = [
+    "bench_block_size",
+    "bench_variants",
+    "bench_kernels",
+    "bench_assembly",
+    "bench_feti",
+    "bench_lm",
+]
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--only", default=None,
+                   help="run a single bench module by name")
+    args = p.parse_args(argv)
+
+    print(HEADER)
+    t0 = time.perf_counter()
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        t1 = time.perf_counter()
+        mod.main()
+        print(f"# {name}: {time.perf_counter() - t1:.1f}s", file=sys.stderr)
+    print(f"# total: {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,50 @@
+"""End-to-end FETI solve of the paper's benchmark problem (heat transfer
+on a decomposed box), explicit vs implicit dual operator, validated
+against the undecomposed global sparse solve.
+
+    PYTHONPATH=src python examples/feti_heat_solve.py --dim 2 --subs 3 --elems 8
+"""
+import argparse
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+from repro.core import SchurAssemblyConfig
+from repro.fem import decompose_heat_problem
+from repro.feti import FetiSolver
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--dim", type=int, default=2, choices=(2, 3))
+    p.add_argument("--subs", type=int, default=3, help="subdomains per axis")
+    p.add_argument("--elems", type=int, default=8, help="elements per axis")
+    p.add_argument("--block-size", type=int, default=16)
+    p.add_argument("--tol", type=float, default=1e-9)
+    args = p.parse_args(argv)
+
+    grid = (args.subs,) * args.dim
+    eps = (args.elems,) * args.dim
+    prob = decompose_heat_problem(args.dim, grid, eps)
+    print(f"decomposition: {len(prob.subdomains)} subdomains x "
+          f"{prob.subdomains[0].n} DOFs, {prob.n_lambda} multipliers")
+
+    cfg = SchurAssemblyConfig(block_size=args.block_size,
+                              rhs_block_size=args.block_size)
+    for mode in ("explicit", "implicit"):
+        solver = FetiSolver(prob, cfg, mode=mode)
+        sol = solver.solve(tol=args.tol)
+        u_ref = prob.reference_solution()
+        err = np.max(np.abs(sol.u_global - u_ref)) / np.abs(u_ref).max()
+        print(f"[{mode:9s}] iters={sol.iterations:4d} "
+              f"residual={sol.residual:.2e} rel_err_vs_global={err:.2e} "
+              f"preprocess={sol.timings['preprocess_s']:.2f}s "
+              f"solve={sol.timings['solve_s']:.2f}s")
+        assert sol.converged and err < 1e-6
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Quickstart: the paper's technique in 30 lines.
+
+Assembles one subdomain's dense dual operator F̃ = B̃ K⁺ B̃ᵀ two ways —
+the dense baseline of [Homola et al. '25] (§3.1) and this paper's
+sparsity-utilizing stepped pipeline — and shows they agree while the
+stepped one does a fraction of the FLOPs.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    SchurAssemblyConfig,
+    assemble_schur,
+    assembly_flops,
+    build_stepped_meta,
+    schur_dense_baseline,
+)
+from repro.testing import (
+    block_fill_mask_from_factor,
+    random_feti_like_bt,
+    random_lower_banded,
+)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n, m = 512, 128  # subdomain DOFs x local Lagrange multipliers
+    L = jnp.asarray(random_lower_banded(n, 40, rng))  # Cholesky factor
+    Bt = jnp.asarray(random_feti_like_bt(n, m, rng))  # gluing matrix B̃ᵀ
+
+    # symbolic phase (once per decomposition): stepped metadata + block mask
+    meta = build_stepped_meta(np.asarray(Bt) != 0, block_size=64)
+    mask = block_fill_mask_from_factor(np.asarray(L), 64)
+
+    cfg = SchurAssemblyConfig(trsm_variant="factor_split",
+                              syrk_variant="input_split", block_size=64)
+    F_opt = assemble_schur(L, Bt, meta, cfg, block_mask=mask)
+    F_ref = schur_dense_baseline(L, Bt)
+
+    err = float(jnp.max(jnp.abs(F_opt - F_ref)))
+    fl_opt = assembly_flops(meta, cfg)["total"]
+    fl_dense = meta.flops_trsm_dense() + meta.flops_syrk_dense()
+    print(f"SC size: {m}x{m}   max |F_opt - F_dense| = {err:.2e}")
+    print(f"stepped FLOPs: {fl_opt:.3e}  dense FLOPs: {fl_dense:.3e}  "
+          f"-> {fl_dense / fl_opt:.2f}x fewer")
+    assert err < 1e-9
+
+
+if __name__ == "__main__":
+    main()

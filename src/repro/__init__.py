@@ -1,0 +1,5 @@
+"""repro: sparsity-utilizing Schur complement assembly for domain
+decomposition (Homola et al., CS.DC 2025) as a multi-pod JAX/Pallas
+framework. See README.md for the map and DESIGN.md for the design."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,12 @@
+"""Assigned-architecture configs (exact public-literature numbers) plus the
+paper's own FETI problems, all selectable via --arch <id>."""
+from repro.configs.registry import (
+    FetiArchConfig,
+    get_config,
+    get_smoke_config,
+    list_archs,
+    register,
+)
+
+__all__ = ["FetiArchConfig", "get_config", "get_smoke_config", "list_archs",
+           "register"]

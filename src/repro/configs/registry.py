@@ -1,0 +1,78 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher.
+
+Each config module registers a full-size ModelConfig (exact public-
+literature numbers) and a reduced smoke ModelConfig (same family/topology,
+tiny dims) used by the CPU smoke tests. The paper's own FETI problem
+registers through the same mechanism with a FetiArchConfig.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, Optional, Tuple
+
+__all__ = ["register", "get_config", "get_smoke_config", "list_archs",
+           "FetiArchConfig", "ARCH_MODULES"]
+
+_FULL: Dict[str, Callable] = {}
+_SMOKE: Dict[str, Callable] = {}
+
+ARCH_MODULES = [
+    "qwen2_vl_2b",
+    "granite_3_8b",
+    "nemotron_4_340b",
+    "qwen15_32b",
+    "mistral_large_123b",
+    "recurrentgemma_2b",
+    "rwkv6_1_6b",
+    "grok_1_314b",
+    "deepseek_v2_236b",
+    "hubert_xlarge",
+    "feti_heat_2d",
+    "feti_heat_3d",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FetiArchConfig:
+    """The paper's own 'architecture': a FETI heat-transfer problem."""
+
+    name: str
+    dim: int
+    sub_grid: Tuple[int, ...]
+    elems_per_sub: Tuple[int, ...]
+    block_size: int = 128
+    rhs_block_size: int = 128
+    trsm_variant: str = "factor_split"
+    syrk_variant: str = "input_split"
+    family: str = "feti"
+
+
+def register(name: str, full: Callable, smoke: Callable) -> None:
+    _FULL[name] = full
+    _SMOKE[name] = smoke
+
+
+def _ensure_loaded() -> None:
+    for mod in ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str):
+    _ensure_loaded()
+    if name not in _FULL:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_FULL)}")
+    return _FULL[name]()
+
+
+def get_smoke_config(name: str):
+    _ensure_loaded()
+    return _SMOKE[name]()
+
+
+def list_archs(family: Optional[str] = None) -> list[str]:
+    _ensure_loaded()
+    names = sorted(_FULL)
+    if family is None:
+        return names
+    return [n for n in names if getattr(_FULL[n](), "family", None) == family]

@@ -1,0 +1,46 @@
+"""The paper's primary contribution: sparsity-utilizing assembly of Schur
+complement matrices (dual operators) in domain decomposition methods.
+
+Public API:
+  * stepped-shape analysis and metadata: :mod:`repro.core.stepped`
+  * TRSM variants (RHS / factor splitting + pruning): :mod:`repro.core.trsm`
+  * SYRK variants (input / output splitting): :mod:`repro.core.syrk`
+  * the assembly pipeline + config: :mod:`repro.core.schur`
+"""
+from repro.core.schur import (
+    SchurAssemblyConfig,
+    assemble_schur,
+    assembly_flops,
+    make_assembler,
+    schur_dense_baseline,
+)
+from repro.core.stepped import (
+    SteppedMeta,
+    build_stepped_meta,
+    column_pivots,
+    row_trails,
+    shared_envelope,
+    stepped_permutation,
+)
+from repro.core.syrk import syrk_dense, syrk_input_split, syrk_output_split
+from repro.core.trsm import trsm_dense, trsm_factor_split, trsm_rhs_split
+
+__all__ = [
+    "SchurAssemblyConfig",
+    "SteppedMeta",
+    "assemble_schur",
+    "assembly_flops",
+    "build_stepped_meta",
+    "column_pivots",
+    "make_assembler",
+    "row_trails",
+    "schur_dense_baseline",
+    "shared_envelope",
+    "stepped_permutation",
+    "syrk_dense",
+    "syrk_input_split",
+    "syrk_output_split",
+    "trsm_dense",
+    "trsm_factor_split",
+    "trsm_rhs_split",
+]

@@ -1,0 +1,165 @@
+"""The sparsity-utilizing Schur complement assembly pipeline (paper §3).
+
+Assembles the dense local dual operator
+
+    F̃ = B̃ L⁻ᵀ L⁻¹ B̃ᵀ = (L⁻¹B̃ᵀ)ᵀ (L⁻¹B̃ᵀ) = Yᵀ Y          (paper eq. 14)
+
+from the Cholesky factor ``L`` of the regularized subdomain matrix and the
+gluing matrix ``B̃ᵀ``, wisely utilizing the sparsity of both:
+
+  1. column-permute B̃ᵀ into the *stepped* shape (stepped.py),
+  2. TRSM with RHS- or factor-splitting (trsm.py) — optionally the Pallas
+     stepped_trsm kernel,
+  3. SYRK with input- or output-splitting (syrk.py) — optionally the Pallas
+     stepped_syrk kernel,
+  4. permute the resulting SC back to the original multiplier order.
+
+The selectable ``SchurAssemblyConfig`` reproduces every row of the paper's
+Table 1 / Figure 6 design space, plus the dense baseline of [9] (§3.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stepped as stepped_mod
+from repro.core import syrk as syrk_mod
+from repro.core import trsm as trsm_mod
+from repro.core.stepped import SteppedMeta, build_stepped_meta
+
+__all__ = [
+    "SchurAssemblyConfig",
+    "make_assembler",
+    "assemble_schur",
+    "schur_dense_baseline",
+    "assembly_flops",
+]
+
+TRSM_VARIANTS = ("dense", "rhs_split", "factor_split")
+SYRK_VARIANTS = ("dense", "input_split", "output_split")
+
+
+@dataclasses.dataclass(frozen=True)
+class SchurAssemblyConfig:
+    """Configuration of the SC assembly (paper §3 / Table 1).
+
+    Attributes:
+      trsm_variant: "dense" (baseline [9]) | "rhs_split" | "factor_split".
+      syrk_variant: "dense" (baseline [9]) | "input_split" | "output_split".
+      block_size: factor row-block size (paper's "S"; Table 1 optimum ≈500
+        on GPU-3D, our TPU tiles default to 128-aligned sizes).
+      rhs_block_size: RHS column-block size (defaults to block_size).
+      prune: skip structurally-zero factor blocks in the factor-split GEMM
+        updates (needs a block fill mask; paper's "pruning").
+      use_pallas: dispatch TRSM/SYRK to the Pallas TPU kernels.
+      interpret: run Pallas kernels in interpret mode (CPU validation).
+    """
+
+    trsm_variant: str = "factor_split"
+    syrk_variant: str = "input_split"
+    block_size: int = 128
+    rhs_block_size: Optional[int] = None
+    prune: bool = True
+    use_pallas: bool = False
+    interpret: bool = False
+
+    def __post_init__(self):
+        if self.trsm_variant not in TRSM_VARIANTS:
+            raise ValueError(f"trsm_variant must be one of {TRSM_VARIANTS}")
+        if self.syrk_variant not in SYRK_VARIANTS:
+            raise ValueError(f"syrk_variant must be one of {SYRK_VARIANTS}")
+
+    @property
+    def rhs_bs(self) -> int:
+        return self.rhs_block_size or self.block_size
+
+
+def _trsm(L, Bp, meta, cfg, block_mask):
+    if cfg.use_pallas and cfg.trsm_variant != "dense":
+        from repro.kernels import ops as kops  # lazy: avoid import cycle
+
+        return kops.stepped_trsm(L, Bp, meta, interpret=cfg.interpret)
+    if cfg.trsm_variant == "dense":
+        return trsm_mod.trsm_dense(L, Bp)
+    if cfg.trsm_variant == "rhs_split":
+        return trsm_mod.trsm_rhs_split(L, Bp, meta)
+    return trsm_mod.trsm_factor_split(
+        L, Bp, meta, block_mask=block_mask if cfg.prune else None
+    )
+
+
+def _syrk(Y, meta, cfg):
+    if cfg.use_pallas and cfg.syrk_variant != "dense":
+        from repro.kernels import ops as kops  # lazy: avoid import cycle
+
+        return kops.stepped_syrk(Y, meta, interpret=cfg.interpret)
+    if cfg.syrk_variant == "dense":
+        return syrk_mod.syrk_dense(Y)
+    if cfg.syrk_variant == "input_split":
+        return syrk_mod.syrk_input_split(Y, meta)
+    return syrk_mod.syrk_output_split(Y, meta)
+
+
+def make_assembler(
+    meta: SteppedMeta,
+    cfg: SchurAssemblyConfig,
+    block_mask: Optional[np.ndarray] = None,
+) -> Callable[[jax.Array, jax.Array], jax.Array]:
+    """Build the (jit-friendly) assembler for one sparsity pattern.
+
+    Returns ``assemble(L, Bt) -> F`` where ``Bt`` is (n, m) in the ORIGINAL
+    column order and ``F`` is the (m, m) dense SC in the original order.
+    The permutation in/out is part of the compiled program (paper §4.4
+    includes it in the measured assembly, so do we).
+    """
+    perm = jnp.asarray(meta.perm)
+    inv = jnp.asarray(meta.inv_perm)
+
+    def assemble(L: jax.Array, Bt: jax.Array) -> jax.Array:
+        Bp = Bt[:, perm]
+        Y = _trsm(L, Bp, meta, cfg, block_mask)
+        Fp = _syrk(Y, meta, cfg)
+        # permute back: F[i, j] = Fp[inv[i], inv[j]]
+        return Fp[inv][:, inv]
+
+    return assemble
+
+
+def assemble_schur(
+    L: jax.Array,
+    Bt: jax.Array,
+    meta: SteppedMeta,
+    cfg: SchurAssemblyConfig,
+    block_mask: Optional[np.ndarray] = None,
+) -> jax.Array:
+    """One-shot convenience wrapper around :func:`make_assembler`."""
+    return make_assembler(meta, cfg, block_mask)(L, Bt)
+
+
+def schur_dense_baseline(L: jax.Array, Bt: jax.Array) -> jax.Array:
+    """The original algorithm of [9] (paper §3.1): dense TRSM + dense SYRK.
+
+    No permutation, no splitting — the baseline every speedup in the paper
+    (and EXPERIMENTS.md §Paper-repro) is measured against.
+    """
+    Y = trsm_mod.trsm_dense(L, Bt)
+    return syrk_mod.syrk_dense(Y)
+
+
+def assembly_flops(meta: SteppedMeta, cfg: SchurAssemblyConfig) -> dict:
+    """FLOP model of one assembly under ``cfg`` (lower-triangle SYRK)."""
+    trsm = {
+        "dense": meta.flops_trsm_dense,
+        "rhs_split": meta.flops_trsm_rhs_split,
+        "factor_split": meta.flops_trsm_factor_split,
+    }[cfg.trsm_variant]()
+    syrk = {
+        "dense": meta.flops_syrk_dense,
+        "input_split": meta.flops_syrk_input_split,
+        "output_split": meta.flops_syrk_output_split,
+    }[cfg.syrk_variant]()
+    return {"trsm": trsm, "syrk": syrk, "total": trsm + syrk}

@@ -1,0 +1,12 @@
+"""Data substrate: deterministic synthetic batches for every assigned
+architecture's input contract, and a memmap token-file pipeline with
+per-host sharding for real corpora."""
+from repro.data.synthetic import synthetic_batch, synthetic_batches
+from repro.data.tokens import TokenFileDataset, write_token_file
+
+__all__ = [
+    "TokenFileDataset",
+    "synthetic_batch",
+    "synthetic_batches",
+    "write_token_file",
+]

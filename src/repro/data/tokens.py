@@ -1,0 +1,59 @@
+"""Memmap token-file pipeline: flat binary corpus -> sharded, shuffled,
+fixed-length LM batches. Per-host sharding keys off (host_id, num_hosts) so
+every host reads a disjoint stream — the multi-node data path."""
+from __future__ import annotations
+
+import os
+from typing import Iterator
+
+import numpy as np
+
+__all__ = ["write_token_file", "TokenFileDataset"]
+
+_MAGIC = np.uint32(0x52503031)  # "RP01"
+
+
+def write_token_file(path: str, tokens: np.ndarray) -> None:
+    tokens = np.asarray(tokens)
+    assert tokens.ndim == 1
+    dtype = np.uint32 if tokens.max(initial=0) >= 2**16 else np.uint16
+    with open(path, "wb") as f:
+        header = np.array(
+            [_MAGIC, np.uint32(1 if dtype == np.uint16 else 2),
+             np.uint32(len(tokens) & 0xFFFFFFFF),
+             np.uint32(len(tokens) >> 32)], np.uint32,
+        )
+        f.write(header.tobytes())
+        f.write(tokens.astype(dtype).tobytes())
+
+
+class TokenFileDataset:
+    """Iterates (tokens, labels) windows from a flat token file."""
+
+    def __init__(self, path: str, seq_len: int, batch_size: int,
+                 host_id: int = 0, num_hosts: int = 1, seed: int = 0):
+        header = np.fromfile(path, np.uint32, count=4)
+        if header[0] != _MAGIC:
+            raise ValueError(f"{path}: bad magic {header[0]:#x}")
+        dtype = np.uint16 if header[1] == 1 else np.uint32
+        count = int(header[2]) | (int(header[3]) << 32)
+        self._data = np.memmap(path, dtype, mode="r", offset=16, shape=(count,))
+        self.seq_len = seq_len
+        self.batch_size = batch_size
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self.seed = seed
+        self.n_windows = (count - 1) // seq_len
+
+    def __iter__(self) -> Iterator[dict]:
+        rng = np.random.default_rng(self.seed)
+        order = rng.permutation(self.n_windows)
+        order = order[self.host_id :: self.num_hosts]  # disjoint per host
+        bs, sl = self.batch_size, self.seq_len
+        for i in range(0, len(order) - bs + 1, bs):
+            idx = order[i : i + bs]
+            toks = np.stack([self._data[j * sl : j * sl + sl + 1] for j in idx])
+            yield {
+                "tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32),
+            }

@@ -1,0 +1,34 @@
+"""Distribution substrate: sharding rules (DP/FSDP/TP/EP/SP), elastic
+sharded checkpointing, straggler monitoring, gradient compression."""
+from repro.distributed.checkpoint import (
+    available_steps,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.distributed.compression import bf16_compress, make_int8_error_feedback
+from repro.distributed.elastic import ElasticPlan, StepTimer, StragglerMonitor
+from repro.distributed.sharding import (
+    batch_shardings,
+    batch_spec,
+    cache_shardings,
+    opt_state_shardings,
+    param_shardings,
+)
+
+__all__ = [
+    "ElasticPlan",
+    "StepTimer",
+    "StragglerMonitor",
+    "available_steps",
+    "batch_shardings",
+    "batch_spec",
+    "bf16_compress",
+    "cache_shardings",
+    "latest_step",
+    "make_int8_error_feedback",
+    "opt_state_shardings",
+    "param_shardings",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

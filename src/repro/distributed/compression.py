@@ -1,0 +1,59 @@
+"""Gradient compression for cross-pod reductions.
+
+On a multi-pod mesh the 'pod' axis rides DCI links (~an order of magnitude
+slower than ICI); compressing gradients before the cross-pod reduce is the
+standard lever. Two schemes:
+
+  * bf16 cast (2x) — what the train step applies by default across pods;
+    numerically safe with fp32 Adam moments.
+  * int8 per-tensor scale (4x) with error feedback — the residual of the
+    quantizer is carried and re-added next step, which keeps SGD unbiased
+    in the long run.
+
+Compression is wired in via TrainConfig.grad_transform; the error-feedback
+state rides inside the returned closure's ``state`` pytree.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["bf16_compress", "make_int8_error_feedback"]
+
+
+def bf16_compress(grads):
+    """Simulate a bf16 all-reduce: cast down, cast back."""
+    return jax.tree.map(
+        lambda g: g.astype(jnp.bfloat16).astype(g.dtype), grads
+    )
+
+
+def _int8_roundtrip(g: jax.Array) -> jax.Array:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(g.dtype) * scale
+
+
+def make_int8_error_feedback(params_template
+                             ) -> Tuple[Callable, dict]:
+    """Returns (transform(grads, state) -> (grads, state), initial_state)."""
+    state0 = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params_template
+    )
+
+    def transform(grads, state):
+        new_grads = jax.tree.map(
+            lambda g, e: _int8_roundtrip(g.astype(jnp.float32) + e).astype(
+                g.dtype
+            ),
+            grads, state,
+        )
+        new_state = jax.tree.map(
+            lambda g, e, q: g.astype(jnp.float32) + e - q.astype(jnp.float32),
+            grads, state, new_grads,
+        )
+        return new_grads, new_state
+
+    return transform, state0

@@ -1,0 +1,209 @@
+"""Sharding rules: map every parameter / batch / cache tensor to a
+PartitionSpec on the production mesh.
+
+Strategy (DESIGN.md §6):
+  * batch axis            -> ('pod', 'data')   (pure DP across pods)
+  * params, dim "in"      -> 'data'            (FSDP / ZeRO-3 via GSPMD:
+                                                XLA inserts per-layer
+                                                all-gathers)
+  * params, dim "out/TP"  -> 'model'           (tensor parallelism: heads,
+                                                ffn hidden, vocab)
+  * MoE expert axis       -> 'model' when divisible (EP), else TP fallback
+  * decode KV cache seq   -> 'model'           (flash-decoding style)
+
+Every axis assignment is divisibility-guarded: a dimension that does not
+divide the mesh axis silently degrades to replication on that axis, so one
+rule set serves all 10 architectures (e.g. grok's 8 experts vs deepseek's
+160).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "batch_spec",
+    "param_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "opt_state_shardings",
+    "axis_size",
+]
+
+
+def axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([axis_size(mesh, n) for n in name]))
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _fit(mesh: Mesh, dim: int, name) -> Optional[str]:
+    """Axis name if the dim divides the axis size, else None (replicate)."""
+    if name is None:
+        return None
+    return name if dim % axis_size(mesh, name) == 0 else None
+
+
+def batch_spec(mesh: Mesh) -> P:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return P(dp if dp else None)
+
+
+def _dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _matrix_spec(mesh: Mesh, shape, tp_dim: int, fsdp_dim: int,
+                 extra_leading: int = 0) -> P:
+    """Generic 2D weight spec with optional leading stacked axes."""
+    axes = [None] * len(shape)
+    axes[tp_dim] = _fit(mesh, shape[tp_dim], "model")
+    axes[fsdp_dim] = _fit(mesh, shape[fsdp_dim], "data")
+    return P(*axes)
+
+
+def _spec_for_param(mesh: Mesh, path: str, x) -> P:
+    shape = x.shape
+    nd = len(shape)
+    lead = nd - 2  # stacked scan axes (body params carry a cycle dim)
+
+    def mat(tp_last: bool) -> P:
+        axes = [None] * nd
+        if nd >= 2:
+            tp_dim = nd - 1 if tp_last else nd - 2
+            fs_dim = nd - 2 if tp_last else nd - 1
+            axes[tp_dim] = _fit(mesh, shape[tp_dim], "model")
+            axes[fs_dim] = _fit(mesh, shape[fs_dim], "data")
+        return P(*axes)
+
+    if "embed" in path or "lm_head" in path:
+        # (V, d) / (d, V): vocab-parallel + FSDP
+        vdim = 0 if "embed" in path and "lm_head" not in path else nd - 1
+        axes = [None] * nd
+        axes[vdim] = _fit(mesh, shape[vdim], "model")
+        other = nd - 1 - vdim
+        axes[other] = _fit(mesh, shape[other], "data")
+        return P(*axes)
+
+    if "router" in path:
+        return P(*([None] * (nd - 1) + [_fit(mesh, shape[-1], "model")]))
+
+    # stacked expert weights (…, E, d, ff) / (…, E, ff, d): EP over 'model'.
+    # MoE weights sit directly under "mlp/" as raw arrays (no "/w" suffix),
+    # which distinguishes them from scan-stacked dense MLP weights.
+    if path.endswith(("mlp/wi", "mlp/wg", "mlp/wo")) and nd >= 3:
+        e_ax = _fit(mesh, shape[-3], "model")
+        axes = [None] * nd
+        axes[-3] = e_ax
+        if e_ax is None:
+            # EP impossible (e.g. grok's 8 experts on a 16-wide axis):
+            # fall back to TP on the ff dim + FSDP on the d dim.
+            hid = nd - 2 if path.endswith("wo") else nd - 1  # ff dim
+            oth = nd - 1 if path.endswith("wo") else nd - 2  # d dim
+            axes[hid] = _fit(mesh, shape[hid], "model")
+            axes[oth] = _fit(mesh, shape[oth], "data")
+        else:
+            axes[-2] = _fit(mesh, shape[-2], "data")
+        return P(*axes)
+
+    # projections whose OUTPUT is the TP dim
+    if any(k in path for k in ("wq", "wk", "wv", "wg", "wi", "wq_b", "wk_b",
+                               "wv_b", "w_in", "w_gate_in", "cm_k", "wa",
+                               "wx", "wr")):
+        if nd >= 2:
+            return mat(tp_last=True)
+        return P(_fit(mesh, shape[-1], "model"))
+
+    # projections whose INPUT is the TP dim
+    if any(k in path for k in ("wo", "w_out", "cm_v", "cm_r")):
+        if nd >= 2:
+            return mat(tp_last=False)
+        return P(None)
+
+    # everything else (norm scales, biases, gates, decay params): replicate
+    return P(*([None] * nd))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_shardings(mesh: Mesh, params, fsdp: bool = True) -> object:
+    """NamedSharding tree matching ``params``.
+
+    ``fsdp=False`` replicates over the 'data' axis (pure TP): the decode
+    configuration for models whose TP-sharded weights fit HBM — per-step
+    ZeRO weight regathers are pure overhead in the memory-bound decode
+    regime (§Perf: recurrentgemma decode collective fix)."""
+
+    def one(path, x):
+        spec = _spec_for_param(mesh, _path_str(path), x)
+        if not fsdp:
+            spec = P(*[
+                None if a == "data"
+                or (isinstance(a, tuple) and "data" in a) else a
+                for a in spec
+            ])
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_shardings(mesh: Mesh, batch) -> object:
+    bs = batch_spec(mesh)
+
+    def spec(x):
+        # divisibility-guarded: long_500k has global_batch=1, which rides
+        # replicated (its parallelism lives in the model/cache axes)
+        first = _fit(mesh, x.shape[0], bs[0]) if bs and len(x.shape) else None
+        axes = [first] + [None] * (len(x.shape) - 1)
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_shardings(mesh: Mesh, cache, min_seq_to_shard: int = 0) -> object:
+    """KV caches: batch -> DP axes, sequence axis -> 'model'
+    (flash-decoding: every model shard owns a slice of the history).
+    Recurrent states (rwkv S / rglru h / conv) shard batch + head/width.
+
+    ``min_seq_to_shard``: sequence axes shorter than this replicate over
+    'model' instead — seq-sharding a 2048-slot ring cache only buys
+    per-step gathers (§Perf: recurrentgemma decode collective fix)."""
+    dp = _dp_axes(mesh)
+
+    def spec(path, x):
+        pstr = _path_str(path)
+        nd = len(x.shape)
+        axes = [None] * nd
+        b_ax = 1 if "body" in pstr else 0  # scan-stacked: (cycles, B, ...)
+        if nd > b_ax:
+            axes[b_ax] = _fit(mesh, x.shape[b_ax], dp if dp else None)
+        leaf = pstr.rsplit("/", 1)[-1]
+        if leaf in ("k", "v", "ckv", "krope", "pos") and nd > b_ax + 1:
+            if x.shape[b_ax + 1] >= min_seq_to_shard:
+                axes[b_ax + 1] = _fit(mesh, x.shape[b_ax + 1], "model")
+        elif leaf in ("S", "h", "conv") and nd > b_ax + 1:
+            axes[b_ax + 1] = _fit(mesh, x.shape[b_ax + 1], "model")
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def opt_state_shardings(mesh: Mesh, opt_state, params_sh) -> object:
+    return {
+        "m": params_sh,
+        "v": params_sh,
+        "step": NamedSharding(mesh, P()),
+    }

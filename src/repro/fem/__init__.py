@@ -1,0 +1,30 @@
+"""FEM substrate: structured heat-transfer meshes (paper §4's benchmark
+problem), P1 stiffness assembly, and the total-FETI domain decomposition
+(subdomains, gluing matrices B, Dirichlet constraints)."""
+from repro.fem.assembly import (
+    assemble_dense,
+    assemble_scipy_csr,
+    load_vector,
+    p1_element_stiffness,
+)
+from repro.fem.decomposition import (
+    FetiProblem,
+    SubdomainData,
+    decompose_heat_problem,
+)
+from repro.fem.meshgen import Mesh, structured_mesh
+from repro.fem.regularization import fixing_node_regularization, kernel_basis
+
+__all__ = [
+    "FetiProblem",
+    "Mesh",
+    "SubdomainData",
+    "assemble_dense",
+    "assemble_scipy_csr",
+    "decompose_heat_problem",
+    "fixing_node_regularization",
+    "kernel_basis",
+    "load_vector",
+    "p1_element_stiffness",
+    "structured_mesh",
+]

@@ -1,0 +1,83 @@
+"""P1 finite-element assembly for the heat-transfer (Laplace) problem.
+
+Element stiffness and scatter-assembly are implemented in JAX (vectorized
+over elements); a scipy CSR path exists only as the reference oracle for
+validating the FETI solve against an undecomposed global solve.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sps
+
+__all__ = [
+    "p1_element_stiffness",
+    "load_vector",
+    "assemble_dense",
+    "assemble_scipy_csr",
+]
+
+
+def p1_element_stiffness(coords, elems, kappa: float = 1.0, dtype=jnp.float64):
+    """Per-element P1 stiffness matrices, vectorized over elements.
+
+    For a simplex with vertices p0..pd, barycentric gradients are
+    ``g_j = rows of inv(D)`` for j>=1 (``D[:, j-1] = p_j - p_0``) and
+    ``g_0 = -sum_j g_j``; then ``Ke = kappa * vol * G Gᵀ``.
+
+    Returns (n_elems, d+1, d+1).
+    """
+    coords = jnp.asarray(coords, dtype=dtype)
+    elems = jnp.asarray(elems)
+    d = coords.shape[1]
+    p = coords[elems]  # (ne, d+1, d)
+    D = jnp.swapaxes(p[:, 1:, :] - p[:, :1, :], 1, 2)  # (ne, d, d)
+    det = jnp.linalg.det(D)
+    vol = jnp.abs(det) / math.factorial(d)
+    Dinv = jnp.linalg.inv(D)  # (ne, d, d); rows of Dinv are g_1..g_d
+    g_rest = Dinv  # (ne, d, d)
+    g0 = -jnp.sum(g_rest, axis=1, keepdims=True)  # (ne, 1, d)
+    G = jnp.concatenate([g0, g_rest], axis=1)  # (ne, d+1, d)
+    Ke = kappa * vol[:, None, None] * jnp.einsum("eid,ejd->eij", G, G)
+    return Ke
+
+
+def load_vector(coords, elems, n_nodes: int, source: float = 1.0,
+                dtype=jnp.float64):
+    """Consistent P1 load vector for a constant source term."""
+    coords = jnp.asarray(coords, dtype=dtype)
+    elems_j = jnp.asarray(elems)
+    d = coords.shape[1]
+    p = coords[elems_j]
+    D = jnp.swapaxes(p[:, 1:, :] - p[:, :1, :], 1, 2)
+    vol = jnp.abs(jnp.linalg.det(D)) / math.factorial(d)
+    contrib = (source / (d + 1)) * vol  # per vertex of each element
+    f = jnp.zeros((n_nodes,), dtype=dtype)
+    for v in range(d + 1):
+        f = f.at[elems_j[:, v]].add(contrib)
+    return f
+
+
+def assemble_dense(n_nodes: int, elems, Ke, dtype=None):
+    """Scatter per-element stiffness into a dense (n, n) matrix (JAX)."""
+    elems_j = jnp.asarray(elems)
+    Ke = jnp.asarray(Ke)
+    d1 = elems_j.shape[1]
+    rows = jnp.repeat(elems_j, d1, axis=1).reshape(-1)
+    cols = jnp.tile(elems_j, (1, d1)).reshape(-1)
+    vals = Ke.reshape(-1)
+    K = jnp.zeros((n_nodes, n_nodes), dtype=dtype or Ke.dtype)
+    return K.at[rows, cols].add(vals)
+
+
+def assemble_scipy_csr(n_nodes: int, elems, Ke) -> sps.csr_matrix:
+    """Reference-oracle CSR assembly (host-side, used in tests only)."""
+    elems = np.asarray(elems)
+    Ke = np.asarray(Ke)
+    d1 = elems.shape[1]
+    rows = np.repeat(elems, d1, axis=1).reshape(-1)
+    cols = np.tile(elems, (1, d1)).reshape(-1)
+    K = sps.coo_matrix((Ke.reshape(-1), (rows, cols)), shape=(n_nodes, n_nodes))
+    return K.tocsr()

@@ -1,0 +1,38 @@
+"""Analytic (fixing-node) regularization of the SPSD subdomain matrices
+(paper §2.2, [Brzobohatý et al. 2011]).
+
+For the scalar heat problem the kernel of each floating subdomain matrix is
+the constant vector, so a single fixing node suffices:
+
+    K_reg = K + ρ e_j e_jᵀ
+
+For any rhs ∈ range(K), ``K_reg⁻¹ rhs`` is an *exact* particular solution
+(K_reg r ∝ e_j for kernel vector r, hence e_jᵀ K_reg⁻¹ rhs = rᵀ rhs / ρ' = 0),
+which makes ``K⁺ := K_reg⁻¹`` an exact generalized inverse (K K⁺ K = K) —
+the property FETI needs from eq. (5).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["fixing_node_regularization", "kernel_basis"]
+
+
+def fixing_node_regularization(K, fixing_node: int, rho: float | None = None):
+    """Return K + ρ·e_j e_jᵀ (works for numpy and jax arrays)."""
+    if rho is None:
+        if isinstance(K, np.ndarray):
+            rho = float(np.mean(np.diag(K)))
+        else:
+            rho = jnp.mean(jnp.diag(K))
+    if isinstance(K, np.ndarray):
+        K = K.copy()
+        K[fixing_node, fixing_node] += rho
+        return K
+    return K.at[fixing_node, fixing_node].add(rho)
+
+
+def kernel_basis(n: int, dtype=np.float64) -> np.ndarray:
+    """Orthonormal basis of Ker(K_i) for the heat problem: the constant."""
+    return np.full((n, 1), 1.0 / np.sqrt(n), dtype=dtype)

@@ -1,0 +1,28 @@
+"""FETI solver substrate (paper §2): batched per-cluster preprocessing
+(factorization + sparsity-utilizing SC assembly), the dual operator in both
+implicit and explicit form, the natural-coarse-space projector, PCPG, and
+the end-to-end solver with amortization accounting (paper §5)."""
+from repro.feti.assembly import ClusterState, preprocess_cluster
+from repro.feti.operator import (
+    dual_rhs,
+    explicit_dual_apply,
+    implicit_dual_apply,
+    lumped_preconditioner,
+)
+from repro.feti.pcpg import PCPGResult, pcpg
+from repro.feti.projector import CoarseProblem, build_coarse_problem
+from repro.feti.solver import FetiSolution, FetiSolver
+
+__all__ = [
+    "ClusterState",
+    "CoarseProblem",
+    "FetiSolution",
+    "FetiSolver",
+    "PCPGResult",
+    "build_coarse_problem",
+    "dual_rhs",
+    "explicit_dual_apply",
+    "implicit_dual_apply",
+    "lumped_preconditioner",
+    "pcpg",
+]

@@ -1,0 +1,56 @@
+"""Natural coarse space of FETI: G = BR, the projector
+P = I − G(GᵀG)⁻¹Gᵀ, and the α recovery (paper §2.1, eqs. 4–7)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CoarseProblem", "build_coarse_problem"]
+
+
+@dataclasses.dataclass
+class CoarseProblem:
+    G: jax.Array  # (n_lambda, S)
+    GtG_chol: jax.Array  # (S, S) Cholesky factor of GᵀG
+    e: jax.Array  # (S,) = Rᵀf
+
+    def solve_coarse(self, b: jax.Array) -> jax.Array:
+        """(GᵀG)⁻¹ b via the cached Cholesky factor."""
+        t = jax.scipy.linalg.solve_triangular(self.GtG_chol, b, lower=True)
+        return jax.scipy.linalg.solve_triangular(
+            self.GtG_chol.T, t, lower=False
+        )
+
+    def project(self, x: jax.Array) -> jax.Array:
+        """P x = x − G (GᵀG)⁻¹ Gᵀ x."""
+        return x - self.G @ self.solve_coarse(self.G.T @ x)
+
+    def lambda0(self) -> jax.Array:
+        """Feasible start: λ⁰ = G(GᵀG)⁻¹e satisfies Gᵀλ⁰ = e."""
+        return self.G @ self.solve_coarse(self.e)
+
+    def alpha(self, Flam_minus_d: jax.Array) -> jax.Array:
+        """α = (GᵀG)⁻¹Gᵀ(Fλ − d)."""
+        return self.solve_coarse(self.G.T @ Flam_minus_d)
+
+
+def build_coarse_problem(Bt: jax.Array, f: jax.Array, r_norm: jax.Array,
+                         lambda_ids: jax.Array, n_lambda: int) -> CoarseProblem:
+    """Assemble G = BR (R = normalized constants per subdomain) and e = Rᵀf.
+
+    ``Bt`` may be in any consistent row (node) order — R is constant so the
+    permutation drops out of Bᵀr; we pass the original-order B̃ᵀ.
+    """
+    S, n, m_max = Bt.shape
+    # column i of G: scatter(lambda_ids_i, B̃ᵢ r_i); r_i = r_norm * ones
+    vals = jnp.einsum("snm,s->sm", Bt, r_norm)  # (S, m_max)
+    G = jnp.zeros((n_lambda + 1, S), Bt.dtype)
+    s_idx = jnp.broadcast_to(jnp.arange(S)[:, None], lambda_ids.shape)
+    G = G.at[lambda_ids, s_idx].add(vals)[:-1]
+    GtG = G.T @ G
+    # tiny jitter for the (rare) case of exactly-singular coarse problems
+    GtG = GtG + 1e-12 * jnp.trace(GtG) / S * jnp.eye(S, dtype=Bt.dtype)
+    e = jnp.sum(f, axis=1) * r_norm
+    return CoarseProblem(G=G, GtG_chol=jnp.linalg.cholesky(GtG), e=e)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the Pallas stepped kernels.
+
+These are deliberately the most boring possible implementations — a full
+dense triangular solve and a full dense product — so every zero-skipping
+trick in the kernels is checked against arithmetic that can't share its
+bugs. (They coincide with the paper's §3.1 baseline algorithm.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["trsm_ref", "syrk_ref"]
+
+
+def trsm_ref(L: jax.Array, B: jax.Array) -> jax.Array:
+    """Y = L⁻¹ B via one dense triangular solve."""
+    return jax.lax.linalg.triangular_solve(
+        L, B, left_side=True, lower=True, transpose_a=False
+    )
+
+
+def syrk_ref(Y: jax.Array) -> jax.Array:
+    """F = Yᵀ Y, full symmetric."""
+    return Y.T @ Y

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: stepped SYRK (paper §3.3, adapted to the MXU).
+
+Computes the lower block triangle of ``F = Yᵀ Y`` for a stepped Y. TPU
+adaptation (DESIGN.md §2):
+
+  * The *output splitting* becomes the 2-D Pallas **grid** over (bm × bm)
+    output tiles; upper-triangle programs short-circuit to zero (the same
+    schedule a causal-attention kernel uses to skip fully-masked blocks).
+  * The *k-dimension reduction* is the dynamic lower bound of the k loop:
+    tile (I, J≤I) accumulates only from input row-blocks at or below the
+    pivot of column stripe I (``start_block[I]``) — the zero region above
+    the pivots is never read.
+  * Accumulation is in fp32 (MXU native) regardless of the storage dtype.
+
+ops.py mirrors the strict lower blocks to the upper triangle afterwards;
+the dense F̃ᵢ is consumed by symmetric GEMV in the PCPG solve phase.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["stepped_syrk_pallas"]
+
+
+def _acc_dtype(dtype):
+    return jnp.float32 if dtype in (jnp.bfloat16, jnp.float16, jnp.float32) else dtype
+
+
+def _syrk_kernel(meta_ref, yi_ref, yj_ref, out_ref, *, bs: int, nb: int, bm: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    acc_t = _acc_dtype(out_ref.dtype)
+
+    @pl.when(j > i)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(j <= i)
+    def _():
+        start = meta_ref[i]  # pivots sorted => tile (i, j<=i) starts at i's pivot
+
+        def body(k, acc):
+            rk = pl.ds(k * bs, bs)
+            yi = yi_ref[rk, :]
+            yj = yj_ref[rk, :]
+            return acc + jnp.dot(yi.T, yj, preferred_element_type=acc_t)
+
+        acc = jax.lax.fori_loop(
+            start, nb, body, jnp.zeros((bm, bm), acc_t), unroll=False
+        )
+        out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bm", "interpret"))
+def stepped_syrk_pallas(
+    Y: jax.Array,  # (n, m) stepped TRSM solution (padded to block multiples)
+    start_block: jax.Array,  # (m // bm,) int32 first contributing row block
+    bs: int,
+    bm: int,
+    interpret: bool = False,
+) -> jax.Array:
+    n, m = Y.shape
+    if n % bs or m % bm:
+        raise ValueError("inputs must be padded to block multiples (see ops.py)")
+    nb, nc = n // bs, m // bm
+    if start_block.shape != (nc,):
+        raise ValueError(f"start_block shape {start_block.shape} != {(nc,)}")
+
+    kernel = functools.partial(_syrk_kernel, bs=bs, nb=nb, bm=bm)
+    return pl.pallas_call(
+        kernel,
+        grid=(nc, nc),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # start_block
+            pl.BlockSpec((n, bm), lambda i, j: (0, i)),  # Y column stripe I
+            pl.BlockSpec((n, bm), lambda i, j: (0, j)),  # Y column stripe J
+        ],
+        out_specs=pl.BlockSpec((bm, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, m), Y.dtype),
+        interpret=interpret,
+    )(start_block, Y, Y)

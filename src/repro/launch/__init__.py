@@ -1,0 +1,2 @@
+"""Launchers: production meshes, the multi-pod dry-run, training and FETI
+solve drivers, roofline analysis."""

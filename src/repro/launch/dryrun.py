@@ -1,0 +1,497 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import: jax locks the device count on first
+#   init. 512 placeholder host devices back the production meshes; nothing
+#   here allocates real buffers (ShapeDtypeStruct in, compiled HLO out).
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) cell: build the real step
+function (train_step / prefill / decode / FETI assembly / FETI solve-iter),
+jit with production shardings, ``.lower().compile()``, then record
+
+  * memory_analysis()  — per-device argument/temp/output bytes (fits HBM?)
+  * cost_analysis()    — per-device FLOPs & bytes for §Roofline
+  * collective schedule — op counts + payload bytes parsed from the
+    optimized HLO (launch/roofline.py)
+
+Meshes: single-pod (data=16, model=16) = 256 chips, and multi-pod
+(pod=2, data=16, model=16) = 512 chips. Shape skips (encoder-only decode,
+quadratic long_500k) follow DESIGN.md §5 and are recorded as "skipped".
+
+Usage:
+    python -m repro.launch.dryrun --arch all --shape all --mesh both \
+        --out results/dryrun.jsonl
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import FetiArchConfig, get_config, list_archs
+from repro.distributed.sharding import (
+    batch_shardings,
+    cache_shardings,
+    opt_state_shardings,
+    param_shardings,
+)
+from repro.launch.analytic import lm_cell_counts
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (
+    HW,
+    collective_stats_trip_corrected,
+    roofline_terms,
+)
+from repro.launch.shapes import SHAPES, applicable_shapes, cache_specs, input_specs
+from repro.models import init_model
+from repro.models.config import ModelConfig
+from repro.train import (
+    OptimizerConfig,
+    TrainConfig,
+    adamw_init,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+FETI_SHAPES = ("assembly", "solve_iter")
+BIG_PARAMS = 100e9  # >= this: bf16 moments + gradient accumulation
+
+
+# --------------------------------------------------------------- helpers ----
+def _sds_tree(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def _train_settings(cfg: ModelConfig, opt: bool = False) -> TrainConfig:
+    n = cfg.param_count()
+    big = n >= BIG_PARAMS
+    return TrainConfig(
+        optimizer=OptimizerConfig(
+            moment_dtype="bfloat16" if big else "float32"
+        ),
+        remat=True,
+        grad_accum=8 if big else 1,
+        accum_dtype="bfloat16" if big else "float32",
+        z_loss_coef=1e-4,
+        attn_args=_opt_attn_args(opt),
+    )
+
+
+ATTN_ARGS = {"q_chunk": 1024, "kv_chunk": 512}
+
+
+def _opt_attn_args(opt: bool) -> dict:
+    # §Perf: skip causally-masked KV chunks entirely (≈2x prefill/train
+    # attention flops) — exact, the mask envelope is static.
+    return {**ATTN_ARGS, "skip_masked_blocks": True} if opt else ATTN_ARGS
+
+
+def lower_lm_cell(cfg: ModelConfig, shape_name: str, mesh, opt: bool = False):
+    from repro.distributed.actsharding import activation_sharding
+
+    shape = SHAPES[shape_name]
+    attn_args = _opt_attn_args(opt)
+    min_seq = 4096 if opt else 0  # §Perf: don't seq-shard ring caches
+    params_sds = jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
+    # §Perf: serving (prefill + decode) drops FSDP (pure TP) when the
+    # TP-sharded weights fit — per-step ZeRO weight regathers are pure
+    # overhead when weights are stationary and gradients never flow
+    tp = mesh.shape["model"]
+    pure_tp_ok = cfg.param_count() * 2 / tp <= 4 * 2**30
+    fsdp = not (opt and shape.kind in ("decode", "prefill") and pure_tp_ok)
+    psh = param_shardings(mesh, params_sds, fsdp=fsdp)
+
+    with activation_sharding(mesh):
+        if shape.kind == "train":
+            tcfg = _train_settings(cfg, opt)
+            opt_sds = jax.eval_shape(
+                lambda: adamw_init(params_sds, tcfg.optimizer)
+            )
+            osh = opt_state_shardings(mesh, opt_sds, psh)
+            batch_sds = input_specs(cfg, shape)
+            bsh = batch_shardings(mesh, batch_sds)
+            step = make_train_step(cfg, tcfg)
+            fn = jax.jit(step, in_shardings=(psh, osh, bsh),
+                         donate_argnums=(0, 1))
+            return fn.lower(params_sds, opt_sds, batch_sds)
+
+        cache_sds = cache_specs(cfg, shape)
+        csh = cache_shardings(mesh, cache_sds, min_seq_to_shard=min_seq)
+        if shape.kind == "prefill":
+            batch_sds = input_specs(cfg, shape)
+            bsh = batch_shardings(mesh, batch_sds)
+            step = make_prefill_step(cfg, attn_args=attn_args)
+            fn = jax.jit(step, in_shardings=(psh, bsh, csh),
+                         out_shardings=(None, csh), donate_argnums=(2,))
+            return fn.lower(params_sds, batch_sds, cache_sds)
+
+        # decode
+        B = shape.global_batch
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        tok_sh = batch_shardings(mesh, {"t": tok})["t"]
+        idx = jax.ShapeDtypeStruct((), jnp.int32)
+        step = make_decode_step(cfg, attn_args=attn_args)
+        fn = jax.jit(step, in_shardings=(psh, tok_sh, csh, None),
+                     out_shardings=(None, csh), donate_argnums=(2,))
+        return fn.lower(params_sds, tok, cache_sds, idx)
+
+
+# ----------------------------------------------------------- FETI cells ----
+_FETI_SETUP_CACHE: dict = {}
+
+
+def _feti_setup(fc: FetiArchConfig):
+    """Static metadata for production-sized FETI cells (pattern only).
+    Memoized: the 2M-node topology build is host-side-expensive and shared
+    by assembly/solve_iter × both meshes."""
+    key = (fc.dim, fc.sub_grid, fc.elems_per_sub, fc.block_size,
+           fc.rhs_block_size, fc.trsm_variant, fc.syrk_variant)
+    if key in _FETI_SETUP_CACHE:
+        return _FETI_SETUP_CACHE[key]
+    out = _feti_setup_impl(fc)
+    _FETI_SETUP_CACHE[key] = out
+    return out
+
+
+def _feti_setup_impl(fc: FetiArchConfig):
+    from repro.core import SchurAssemblyConfig, shared_envelope
+    from repro.core.stepped import build_stepped_meta_from_pivots
+    from repro.fem.decomposition import decompose_heat_problem
+    from repro.fem.meshgen import structured_mesh
+    from repro.sparse import (
+        block_pattern,
+        block_symbolic_cholesky,
+        matrix_pattern_from_elems,
+        nested_dissection_order,
+    )
+
+    prob = decompose_heat_problem(fc.dim, fc.sub_grid, fc.elems_per_sub,
+                                  assemble_values=False)
+    node_shape = tuple(e + 1 for e in fc.elems_per_sub)
+    n = int(np.prod(node_shape))
+    node_perm = nested_dissection_order(node_shape)
+    inv_node = np.empty_like(node_perm)
+    inv_node[node_perm] = np.arange(n)
+    lmesh = structured_mesh(fc.elems_per_sub)
+    kpat = matrix_pattern_from_elems(n, lmesh.elems)[node_perm][:, node_perm]
+    cfg = SchurAssemblyConfig(
+        trsm_variant=fc.trsm_variant, syrk_variant=fc.syrk_variant,
+        block_size=fc.block_size, rhs_block_size=fc.rhs_block_size,
+    )
+    mask = block_symbolic_cholesky(block_pattern(kpat, cfg.block_size))
+
+    metas, cps, icps = [], [], []
+    # pad the multiplier dim so the RHS column axis shards over 'model'
+    # (the padded columns are structurally empty: pivot = n)
+    m_pad = -(-prob.m_max // 64) * 64
+    for sd in prob.subdomains:
+        piv = np.full((m_pad,), n, np.int64)
+        piv[: sd.m] = inv_node[sd.b_rows[: sd.m]]
+        me = build_stepped_meta_from_pivots(piv, n, cfg.block_size, cfg.rhs_bs)
+        metas.append(me)
+        cps.append(me.perm)
+        icps.append(me.inv_perm)
+    env = shared_envelope(metas)
+    return prob, cfg, mask, env, np.stack(cps), np.stack(icps), n, m_pad
+
+
+OPT_FETI_GRIDS = {2: (16, 32), 3: (8, 8, 8)}  # 512 subdomains each
+
+
+def lower_feti_cell(fc: FetiArchConfig, shape_name: str, mesh,
+                    opt: bool = False):
+    from repro.feti.assembly import batched_assemble
+    from repro.feti.operator import explicit_dual_apply
+    from repro.sparse.cholesky import block_cholesky
+
+    if opt:
+        # §Perf: make the cluster count match the fleet (the paper's own
+        # production regime: one independent subdomain stream per device)
+        # and shard the subdomain axis over EVERY mesh axis — assembly
+        # becomes embarrassingly parallel, collectives drop to zero.
+        fc = dataclasses.replace(fc, sub_grid=OPT_FETI_GRIDS[fc.dim])
+    prob, cfg, mask, env, cps, icps, n, m = _feti_setup(fc)
+    S = prob.n_subdomains
+    if opt and S % mesh.size == 0:
+        dp = tuple(mesh.shape.keys())
+    else:
+        dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    cp_j, icp_j = jnp.asarray(cps), jnp.asarray(icps)
+
+    if shape_name == "assembly":
+        # paper §2.2 preprocessing: batched masked Cholesky + SC assembly.
+        # §Perf (opt): local multipliers are relabeled host-side so B̃ᵀ
+        # arrives pre-stepped — no runtime permute gathers (see
+        # batched_assemble docstring).
+        def assembly(K_stack, Bt_stack):
+            L = jax.vmap(
+                lambda A: block_cholesky(A, cfg.block_size, mask=mask)
+            )(K_stack)
+            F = batched_assemble(
+                L, Bt_stack, None if opt else cp_j,
+                None if opt else icp_j, env, cfg, mask,
+            )
+            return L, F
+
+        K_sds = jax.ShapeDtypeStruct((S, n, n), jnp.float32)
+        B_sds = jax.ShapeDtypeStruct((S, n, m), jnp.float32)
+        rhs_ax = None if "model" in dp else "model"  # RHS columns = TP
+        in_sh = (
+            NamedSharding(mesh, P(dp, None, None)),
+            NamedSharding(mesh, P(dp, None, rhs_ax)),
+        )
+        out_sh = (
+            NamedSharding(mesh, P(dp, None, None)),
+            NamedSharding(mesh, P(dp, None, None)),
+        )
+        fn = jax.jit(assembly, in_shardings=in_sh, out_shardings=out_sh)
+        return fn.lower(K_sds, B_sds)
+
+    # solve_iter: one explicit dual-operator application (paper eq. 12)
+    nl = prob.n_lambda
+    ids = np.full((S, m), nl, np.int64)
+    for i, sd in enumerate(prob.subdomains):
+        ids[i, : sd.lambda_ids.shape[0]] = sd.lambda_ids
+    lam_ids = jnp.asarray(ids)
+
+    def solve_iter(F_stack, lam):
+        return explicit_dual_apply(F_stack, lam_ids, nl, lam)
+
+    F_sds = jax.ShapeDtypeStruct((S, m, m), jnp.float32)
+    lam_sds = jax.ShapeDtypeStruct((nl,), jnp.float32)
+    in_sh = (NamedSharding(mesh, P(dp, None, None)), NamedSharding(mesh, P()))
+    fn = jax.jit(solve_iter, in_shardings=in_sh)
+    return fn.lower(F_sds, lam_sds)
+
+
+def feti_cell_counts(fc: FetiArchConfig, shape_name: str, chips: int):
+    """Analytic counts for the FETI cells (mirrors the LM analytic model).
+
+    Executed flops = the stepped (sparsity-utilizing) schedule's own flop
+    model — the very quantity the paper optimizes; the dense §3.1 baseline
+    flops are recorded in notes so the stepped speedup is visible per cell.
+    """
+    from repro.core import SchurAssemblyConfig, assembly_flops
+    from repro.launch.analytic import CellCounts
+    from repro.sparse.cholesky import block_cholesky_flops
+
+    prob, cfg, mask, env, _, _, n, m = _feti_setup(fc)
+    S = prob.n_subdomains
+    fb = 4  # f32
+    if shape_name == "assembly":
+        stepped = assembly_flops(env, cfg)["total"]
+        dense = (env.flops_trsm_dense() + env.flops_syrk_dense())
+        chol = block_cholesky_flops(n, cfg.block_size, mask)
+        chol_dense = block_cholesky_flops(n, cfg.block_size)
+        flops_global = float(S * (stepped + chol))
+        # traffic: read K, write L, stream L against the RHS stripe (factor
+        # split reads each factor block once per active stripe), write Y+F
+        bytes_global = float(S * (2 * n * n + 3 * n * m + m * m) * fb)
+        resident = float(S * (2 * n * n + n * m + m * m) * fb)
+        notes = {
+            "stepped_assembly_flops": stepped,
+            "dense_baseline_flops": dense,
+            "stepped_speedup_vs_dense": dense / max(stepped, 1),
+            "cholesky_flops_masked": chol,
+            "cholesky_flops_dense": chol_dense,
+        }
+    else:  # solve_iter
+        flops_global = float(S * 2 * m * m)
+        bytes_global = float(S * m * m * fb)
+        resident = float(S * m * m * fb)
+        notes = {"explicit_gemv_per_subdomain": 2 * m * m}
+    return CellCounts(
+        flops_global=flops_global,
+        flops_per_dev=flops_global / chips,
+        hbm_bytes_per_dev=bytes_global / chips,
+        hbm_resident_per_dev=resident / chips,
+        model_flops=flops_global,
+        notes=notes,
+    )
+
+
+# --------------------------------------------------------------- driver ----
+def analyze(lowered, chips: int, counts, link_bw) -> dict:
+    """Compile + extract everything §Roofline needs.
+
+    FLOP/byte numerators come from the analytic model (``counts``) — XLA's
+    cost_analysis counts loop bodies once (verified; see analytic.py) and
+    the CPU backend's bf16->f32 upcasts inflate memory_analysis, so both
+    HLO numbers are recorded as auxiliary only. Collective payloads come
+    from the compiled HLO with while-loop trip-count correction.
+    """
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    compile_s = time.perf_counter() - t0
+    ma = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_stats_trip_corrected(compiled.as_text())
+    roof = roofline_terms(
+        {"flops": counts.flops_per_dev,
+         "bytes accessed": counts.hbm_bytes_per_dev},
+        coll, chips, counts.model_flops, link_bw,
+    )
+    per_dev_bytes = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                     + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    return {
+        "compile_s": round(compile_s, 2),
+        "arg_bytes_per_dev": int(ma.argument_size_in_bytes),
+        "temp_bytes_per_dev": int(ma.temp_size_in_bytes),
+        "out_bytes_per_dev": int(ma.output_size_in_bytes),
+        "cpu_backend_peak_bytes_per_dev": int(per_dev_bytes),
+        "analytic_resident_bytes_per_dev": int(counts.hbm_resident_per_dev),
+        "fits_hbm": bool(counts.hbm_resident_per_dev <= HW["hbm_bytes"]),
+        "hlo_cost_flops_loop_body_once": float(cost.get("flops", 0.0)),
+        "hlo_cost_bytes_loop_body_once": float(
+            cost.get("bytes accessed", 0.0)
+        ),
+        "collectives": {
+            "bytes": coll.bytes_by_op,
+            "count": coll.count_by_op,
+        },
+        "analytic": counts.notes,
+        "roofline": roof.as_dict(),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             skip_masked: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    tp = mesh.shape["model"]
+    link_bw = HW["dci_bw"] if multi_pod else HW["ici_bw"]
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+    }
+    cfg = get_config(arch)
+    opt = skip_masked  # one flag drives every §Perf optimization
+    rec["optimized"] = opt
+    try:
+        if isinstance(cfg, FetiArchConfig):
+            fc_eff = (dataclasses.replace(cfg, sub_grid=OPT_FETI_GRIDS[cfg.dim])
+                      if opt else cfg)
+            lowered = lower_feti_cell(cfg, shape_name, mesh, opt)
+            counts = feti_cell_counts(fc_eff, shape_name, chips)
+        else:
+            # NOTE: moe_impl="sort" removes the 4·E·C·d dispatch flops
+            # (measured: deepseek prefill compute 9.13s -> 2.57s/dev) but
+            # under GSPMD the per-group expert buffer loses EP locality and
+            # the expert weights get all-gathered per layer (+63s
+            # collective) — net LOSS, so the optimized grid keeps GShard.
+            # An EP-aware sort dispatch needs shard_map (future work);
+            # §Perf cell A records the full hypothesis/refutation.
+            shape = SHAPES[shape_name]
+            lowered = lower_lm_cell(cfg, shape_name, mesh, opt)
+            tcfg = _train_settings(cfg, opt)
+            counts = lm_cell_counts(
+                cfg, shape, chips=chips, tp=tp,
+                grad_accum=tcfg.grad_accum, remat=tcfg.remat,
+                moment_bytes=2 if tcfg.optimizer.moment_dtype == "bfloat16"
+                else 4,
+                accum_bytes=2 if tcfg.accum_dtype == "bfloat16" else 4,
+                q_chunk=ATTN_ARGS["q_chunk"], kv_chunk=ATTN_ARGS["kv_chunk"],
+                skip_masked=opt,
+            )
+        rec.update(analyze(lowered, chips, counts, link_bw))
+        rec["status"] = "ok"
+    except Exception as e:  # a failing cell is a bug; record it loudly
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def iter_cells(arch_sel: str, shape_sel: str, mesh_sel: str):
+    archs = list_archs() if arch_sel == "all" else [arch_sel]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[mesh_sel]
+    for arch in archs:
+        cfg = get_config(arch)
+        if isinstance(cfg, FetiArchConfig):
+            shapes = list(FETI_SHAPES)
+        else:
+            shapes = applicable_shapes(cfg)
+        skipped = ([] if isinstance(cfg, FetiArchConfig)
+                   else [s for s in SHAPES if s not in shapes])
+        if shape_sel != "all":
+            shapes = [s for s in shapes if s == shape_sel]
+            skipped = [s for s in skipped if s == shape_sel]
+        for shape in shapes:
+            for mp in meshes:
+                yield arch, shape, mp, False
+        for shape in skipped:
+            yield arch, shape, False, True
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="all")
+    p.add_argument("--shape", default="all")
+    p.add_argument("--mesh", choices=("single", "multi", "both"),
+                   default="both")
+    p.add_argument("--opt", action="store_true",
+                   help="apply the §Perf optimizations (sort-MoE, causal "
+                        "block skipping, ring-cache replication, fleet-"
+                        "matched FETI decomposition)")
+    p.add_argument("--out", default="results/dryrun.jsonl")
+    args = p.parse_args(argv)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    n_ok = n_err = 0
+    with open(args.out, "a") as f:
+        for arch, shape, mp, skip in iter_cells(args.arch, args.shape,
+                                                args.mesh):
+            if skip:
+                cfg = get_config(arch)
+                reason = ("encoder-only: no decode step"
+                          if cfg.is_encoder_only
+                          else "full attention: long_500k needs sub-quadratic")
+                rec = {"arch": arch, "shape": shape, "mesh": "-",
+                       "status": "skipped", "reason": reason}
+                print(f"[dryrun] SKIP  {arch:22s} {shape:12s} ({reason})")
+            else:
+                t0 = time.perf_counter()
+                rec = run_cell(arch, shape, mp, skip_masked=args.opt)
+                dt = time.perf_counter() - t0
+                if rec["status"] == "ok":
+                    n_ok += 1
+                    r = rec["roofline"]
+                    print(
+                        f"[dryrun] OK    {arch:22s} {shape:12s} "
+                        f"{rec['mesh']:8s} {dt:6.1f}s "
+                        f"res/dev={rec['analytic_resident_bytes_per_dev'] / 2**30:6.2f}GiB "
+                        f"cpuPeak={rec['cpu_backend_peak_bytes_per_dev'] / 2**30:6.1f}GiB "
+                        f"dom={r['dominant']:10s} "
+                        f"useful={r['useful_ratio'] if r['useful_ratio'] is None else round(r['useful_ratio'], 3)}"
+                    )
+                else:
+                    n_err += 1
+                    print(f"[dryrun] ERROR {arch:22s} {shape:12s} "
+                          f"{rec['mesh']:8s}: {rec['error']}")
+                if rec.get("traceback") and n_err <= 3:
+                    print(rec["traceback"][-800:])
+            rec.pop("traceback", None)
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+    print(f"[dryrun] done: {n_ok} ok, {n_err} errors -> {args.out}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,23 @@
+"""Production meshes. A FUNCTION, not module state: importing this module
+never touches jax device initialization."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the 'pod' axis rides
+    DCI and carries pure data parallelism + compressed grad reductions."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever devices exist locally, as a (data, model=1) mesh — lets the
+    same launcher code run on this CPU container."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,107 @@
+"""Render EXPERIMENTS.md tables from results/dryrun.jsonl.
+
+    PYTHONPATH=src python -m repro.launch.report results/dryrun.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+
+def load(path: str) -> list[dict]:
+    recs = [json.loads(l) for l in open(path)]
+    # dedup: keep the LAST record per (arch, shape, mesh, status-kind)
+    seen = {}
+    for r in recs:
+        seen[(r["arch"], r["shape"], r.get("mesh", "-"))] = r
+    return list(seen.values())
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}µs"
+
+
+def dryrun_table(recs) -> str:
+    rows = ["| arch | shape | mesh | status | res GiB/dev | FLOPs/dev | coll GiB/dev | #coll | compile s |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"], x.get("mesh", ""))):
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | - | SKIP: {r['reason']} | | | | | |")
+            continue
+        ro = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} "
+            f"| {fmt_bytes(r['analytic_resident_bytes_per_dev'])} "
+            f"| {ro['flops_per_dev']:.2e} "
+            f"| {fmt_bytes(ro['coll_bytes_per_dev'])} "
+            f"| {sum(r['collectives']['count'].values())} "
+            f"| {r['compile_s']} |"
+        )
+    return "\n".join(rows)
+
+
+def roofline_table(recs, mesh="16x16") -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant | MODEL_FLOPS | useful ratio | bottleneck note |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    notes = {
+        ("compute"): "more MXU-efficient schedule / fewer executed flops",
+        ("memory"): "raise arithmetic intensity (cache dtype, fusion, batch)",
+        ("collective"): "shard to cut payloads / overlap with compute",
+    }
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        if r["status"] != "ok" or r.get("mesh") != mesh:
+            continue
+        ro = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {fmt_s(ro['compute_s'])} | {fmt_s(ro['memory_s'])} "
+            f"| {fmt_s(ro['collective_s'])} | **{ro['dominant']}** "
+            f"| {ro['model_flops']:.2e} "
+            f"| {ro['useful_ratio']:.3f} "
+            f"| {notes[ro['dominant']]} |"
+        )
+    return "\n".join(rows)
+
+
+def pick_hillclimb(recs) -> dict:
+    """worst useful ratio / most collective-bound / paper-representative."""
+    ok = [r for r in recs if r["status"] == "ok" and r["mesh"] == "16x16"
+          and not r["arch"].startswith("feti")]
+    worst = min(ok, key=lambda r: r["roofline"]["useful_ratio"])
+    coll = max(ok, key=lambda r: (r["roofline"]["collective_s"]
+                                  / max(max(r["roofline"]["compute_s"],
+                                            r["roofline"]["memory_s"]), 1e-30)))
+    return {
+        "worst_useful": (worst["arch"], worst["shape"]),
+        "most_collective": (coll["arch"], coll["shape"]),
+        "paper_representative": ("feti-heat-3d", "assembly"),
+    }
+
+
+def main(argv=None):
+    path = (argv or sys.argv[1:])[0] if (argv or sys.argv[1:]) else \
+        "results/dryrun.jsonl"
+    recs = load(path)
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skipped" for r in recs)
+    print(f"## Dry-run census: {n_ok} compiled cells, {n_skip} documented skips\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(recs, "16x16"))
+    print("\n## Roofline (multi-pod 2x16x16)\n")
+    print(roofline_table(recs, "2x16x16"))
+    print("\n## Hillclimb picks\n")
+    print(json.dumps(pick_hillclimb(recs), indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""The assigned input-shape grid and per-(arch, shape) input_specs.
+
+ShapeDtypeStruct stand-ins only — weak-type-correct, shardable, no device
+allocation. The dry-run lowers train_step for `train_*` shapes and
+serve steps (prefill/decode) for the inference shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = ["ShapeCase", "SHAPES", "input_specs", "applicable_shapes",
+           "cache_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCase("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[str]:
+    """DESIGN.md §5 skip rules."""
+    out = ["train_4k", "prefill_32k"]
+    if cfg.is_encoder_only:
+        return out  # no decode step for encoder-only archs
+    out.append("decode_32k")
+    if cfg.is_subquadratic:
+        out.append("long_500k")
+    return out
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCase) -> dict:
+    """Model-input stand-ins for one grid cell.
+
+    train:   full (B, S) token/label batch (+ frontend stubs).
+    prefill: (B, S) prompt tokens.
+    decode:  (B, 1) new token; the KV cache spec comes from cache_specs.
+    """
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    specs = {"tokens": _sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = _sds((B, S), jnp.int32)
+        specs["loss_mask"] = _sds((B, S), jnp.float32)
+    if cfg.frontend_stub and cfg.family == "audio":
+        specs["features"] = _sds((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        if shape.kind != "decode":
+            specs["vision_embeds"] = _sds((B, S, cfg.d_model),
+                                          jnp.dtype(cfg.dtype))
+            specs["vision_mask"] = _sds((B, S), jnp.bool_)
+        specs["positions"] = _sds((B, S, 3), jnp.int32)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeCase) -> Optional[dict]:
+    """ShapeDtypeStruct tree for the KV cache at this shape (decode /
+    prefill), mirroring models.init_cache without allocating."""
+    if shape.kind == "train":
+        return None
+    B = shape.global_batch
+    max_len = shape.seq_len
+    from repro.models import init_cache
+
+    return jax.eval_shape(lambda: init_cache(cfg, B, max_len))

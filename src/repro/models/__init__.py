@@ -1,0 +1,16 @@
+"""Composable LM stack covering the 10 assigned architectures."""
+from repro.models.config import ModelConfig
+from repro.models.model import (
+    default_positions,
+    forward,
+    init_cache,
+    init_model,
+)
+
+__all__ = [
+    "ModelConfig",
+    "default_positions",
+    "forward",
+    "init_cache",
+    "init_model",
+]

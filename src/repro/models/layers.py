@@ -1,0 +1,147 @@
+"""Shared neural building blocks: norms, MLPs, embeddings, RoPE/M-RoPE.
+
+Pure-functional: params are nested dicts of jnp arrays; init functions take
+a PRNG key and return the dict. Activation sharding hints go through
+``repro.distributed.sharding.shard_act`` (a no-op without a mesh).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "init_norm",
+    "apply_norm",
+    "init_dense",
+    "dense",
+    "init_mlp",
+    "mlp",
+    "rope_frequencies",
+    "apply_rope",
+    "apply_mrope",
+]
+
+
+# ---------------------------------------------------------------- norms ----
+def init_norm(d: int, kind: str, dtype) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def rms_norm(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(params: dict, x, kind: str, eps: float):
+    if kind == "layernorm":
+        return layer_norm(x, params["scale"], params["bias"], eps)
+    return rms_norm(x, params["scale"], eps)
+
+
+# ---------------------------------------------------------------- dense ----
+def init_dense(key, d_in: int, d_out: int, dtype, bias: bool = False,
+               scale: float | None = None) -> dict:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params: dict, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+# ------------------------------------------------------------------ MLP ----
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype,
+             bias: bool = False) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {}
+    if kind in ("swiglu", "geglu"):
+        p["wi"] = init_dense(ks[0], d_model, d_ff, dtype, bias)
+        p["wg"] = init_dense(ks[1], d_model, d_ff, dtype, bias)
+    else:
+        p["wi"] = init_dense(ks[0], d_model, d_ff, dtype, bias)
+    p["wo"] = init_dense(ks[2], d_ff, d_model, dtype, bias)
+    return p
+
+
+def mlp(params: dict, x, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(dense(params["wg"], x)) * dense(params["wi"], x)
+    elif kind == "geglu":
+        h = jax.nn.gelu(dense(params["wg"], x)) * dense(params["wi"], x)
+    elif kind == "squared_relu":  # nemotron-4
+        h = jnp.square(jax.nn.relu(dense(params["wi"], x)))
+    elif kind == "gelu":
+        h = jax.nn.gelu(dense(params["wi"], x))
+    else:
+        raise ValueError(f"unknown mlp kind {kind!r}")
+    return dense(params["wo"], h)
+
+
+# ----------------------------------------------------------------- RoPE ----
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def _rotate(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    inv = rope_frequencies(x.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(x, positions, theta: float, sections: Tuple[int, ...]):
+    """Multimodal RoPE (Qwen2-VL): the head_dim/2 frequency slots are split
+    into (t, h, w) sections, each rotated by its own position stream.
+
+    x: (B, S, H, D); positions: (B, S, 3) int32 (t, h, w indices; equal for
+    text tokens).
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_frequencies(x.shape[-1], theta)  # (half,)
+    # section id per frequency slot
+    sec_edges = []
+    acc = 0
+    for s in sections:
+        sec_edges.append((acc, acc + s))
+        acc += s
+    ang_parts = []
+    for i, (lo, hi) in enumerate(sec_edges):
+        pos_i = positions[..., i].astype(jnp.float32)  # (B, S)
+        ang_parts.append(pos_i[..., None] * inv[lo:hi])
+    ang = jnp.concatenate(ang_parts, axis=-1)  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)

@@ -1,0 +1,113 @@
+"""Model wrapper: embeddings (token / stub-frontend / merged VLM), the layer
+stack, final norm and LM head. Pure functions over a params pytree."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_norm, init_norm
+from repro.models.transformer import apply_stack, init_stack, init_stack_cache
+
+__all__ = ["init_model", "forward", "init_cache", "default_positions"]
+
+
+def _dt(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16,
+            "float8_e4m3fn": jnp.float8_e4m3fn}[name]
+
+
+def init_model(key, cfg: ModelConfig) -> dict:
+    dtype = _dt(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+        "stack": init_stack(ks[1], cfg, dtype),
+        "final_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+    if cfg.has_lm_head and not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(ks[2], (cfg.d_model, cfg.vocab_size), jnp.float32)
+            * cfg.d_model ** -0.5
+        ).astype(dtype)
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return init_stack_cache(cfg, batch, max_len,
+                            _dt(cfg.cache_dtype or cfg.dtype))
+
+
+def default_positions(cfg: ModelConfig, batch: int, seq: int,
+                      offset: jax.Array | int = 0) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.pos_emb == "mrope":  # text tokens: t == h == w
+        pos = jnp.broadcast_to(pos[..., None], (batch, seq, 3))
+    return pos
+
+
+def embed_inputs(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    """Token embedding, with frontend stubs merged in.
+
+    batch keys:
+      tokens (B, S) int32            — always present (audio: frame ids)
+      features (B, S, d)             — audio stub: precomputed frame
+                                       embeddings replace the token path
+      vision_embeds (B, S, d)        — vlm stub: precomputed patch
+                                       embeddings, merged where vision_mask
+      vision_mask (B, S) bool
+    """
+    dtype = _dt(cfg.dtype)
+    if cfg.frontend_stub and "features" in batch:
+        h = batch["features"].astype(dtype)
+    else:
+        h = params["embed"][batch["tokens"]].astype(dtype)
+    if "vision_embeds" in batch:
+        mask = batch["vision_mask"][..., None]
+        h = jnp.where(mask, batch["vision_embeds"].astype(dtype), h)
+    return h
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    batch: dict,
+    cache: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    remat: bool = False,
+    attn_args: Optional[dict] = None,
+    last_only: bool = False,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Returns (logits (B,S,V), new_cache, aux_loss).
+
+    ``last_only``: project only the final position through the LM head —
+    the prefill path, where materializing (B, 32768, V) logits would burn
+    terabytes for one needed row."""
+    h = embed_inputs(params, cfg, batch)
+    B, S = h.shape[:2]
+    if positions is None:
+        positions = batch.get("positions")
+    if positions is None:
+        offset = 0 if cache_index is None else cache_index
+        positions = default_positions(cfg, B, S, offset)
+
+    h, new_cache, aux = apply_stack(
+        params["stack"], cfg, h, positions, cache, cache_index,
+        attn_args=attn_args, remat=remat,
+    )
+    if last_only:
+        h = h[:, -1:, :]
+    h = apply_norm(params["final_norm"], h, cfg.norm, cfg.norm_eps)
+    if not cfg.has_lm_head:
+        return h, new_cache, aux
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    else:
+        logits = h @ params["lm_head"]
+    return logits, new_cache, aux

@@ -1,0 +1,113 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+    r_t = σ(W_a x_t + b_a)            (recurrence gate)
+    i_t = σ(W_x x_t + b_x)            (input gate)
+    a_t = a^(c·r_t),  a = σ(Λ)        (data-dependent diagonal decay, c=8)
+    h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ x_t)
+
+preceded by a short temporal conv1d (width 4) and wrapped by in/out
+projections with a GeLU gate — the full Griffin recurrent block.
+
+The diagonal linear recurrence is evaluated with an *associative scan*
+(parallel prefix) over time: O(log S) depth, TPU-friendly — this (plus the
+ring-buffer local-attention cache) is what makes recurrentgemma run the
+long_500k shape. Decode carries (h, conv window) per layer: O(1)/token.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense, init_dense
+
+__all__ = ["init_rglru", "rglru_block", "init_rglru_state"]
+
+C_EXP = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig, dtype) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": init_dense(ks[0], d, w, dtype),  # recurrent branch input
+        "w_gate_in": init_dense(ks[1], d, w, dtype),  # gelu gate branch
+        "w_out": init_dense(ks[2], w, d, dtype),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, w), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "wa": init_dense(ks[4], w, w, dtype),
+        "wx": init_dense(ks[5], w, w, dtype),
+        # Λ init so that a = σ(Λ) ∈ (0.9, 0.999) as in the paper
+        "lam": jnp.asarray(
+            jnp.log(jnp.linspace(0.9, 0.999, w) / (1 - jnp.linspace(0.9, 0.999, w))),
+            dtype,
+        ),
+    }
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w = cfg.lru_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def _causal_conv(x, w, b, carry):
+    """Depthwise causal conv1d. x: (B,S,w); carry: (B,cw-1,w)."""
+    cw = w.shape[0]
+    xp = jnp.concatenate([carry.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    new_carry = xp[:, -(cw - 1) :, :] if cw > 1 else carry
+    return out + b, new_carry
+
+
+def _lru_scan(a, u, h0):
+    """h_t = a_t ⊙ h_{t-1} + u_t via associative scan. a,u: (B,S,w) fp32."""
+    # incorporate initial state as a virtual first element
+    u0 = u.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(x, y):
+        a1, u1 = x
+        a2, u2 = y
+        return a1 * a2, a2 * u1 + u2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, u0), axis=1)
+    return h
+
+
+def rglru_block(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, d) — already normed by the caller
+    state: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, d = x.shape
+    st = state or init_rglru_state(cfg, B, x.dtype)
+
+    from repro.distributed.actsharding import shard_act
+
+    gate = jax.nn.gelu(dense(params["w_gate_in"], x))
+    u = shard_act(dense(params["w_in"], x), "dp", None, "model")
+    u, conv_carry = _causal_conv(u, params["conv_w"], params["conv_b"], st["conv"])
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(params["wa"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(params["wx"], u).astype(jnp.float32))
+    log_a = C_EXP * r * jax.nn.log_sigmoid(params["lam"].astype(jnp.float32))
+    a = shard_act(jnp.exp(log_a), "dp", None, "model")
+    drive = jnp.sqrt(jnp.clip(1.0 - jnp.square(a), 1e-12, 1.0)) * (i * uf)
+    drive = shard_act(drive, "dp", None, "model")
+    h = _lru_scan(a, drive, st["h"])  # (B,S,w) fp32
+    h = shard_act(h, "dp", None, "model")
+
+    y = dense(params["w_out"], (h.astype(x.dtype) * gate))
+    new_state = None
+    if state is not None:
+        new_state = {"h": h[:, -1, :], "conv": conv_carry}
+    return y, new_state

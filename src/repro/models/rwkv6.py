@@ -1,0 +1,199 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time mix with
+data-dependent decay, plus squared-ReLU channel mix.
+
+Recurrence per head (key dim D_k = value dim D_v = rwkv_head_dim):
+
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t
+    o_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+
+with w_t ∈ (0,1) data-dependent (the Finch novelty vs RWKV-5's static w).
+Training/prefill uses a *chunked* evaluation (flash-linear-attention
+style): intra-chunk contributions via masked matmuls on decay-rescaled
+q/k, inter-chunk state carried by a lax.scan over chunks — O(S·D²) work,
+O(S/C) sequential steps, MXU-friendly. Decode keeps the (H, D, D) state
+per sequence: O(1) per token — this is why rwkv6 runs the long_500k shape.
+
+Data-dependent mixes use single low-rank adapters (one LoRA per channel
+family) — the token-shift ddlerp structure of the paper with a shared
+bottleneck; see DESIGN.md §2 for recorded simplifications.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense, init_dense
+
+__all__ = ["init_rwkv6", "rwkv6_block", "init_rwkv_state"]
+
+LORA_RANK = 32
+
+
+def init_rwkv6(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    p = {
+        "wr": init_dense(ks[0], d, d, dtype),
+        "wk": init_dense(ks[1], d, d, dtype),
+        "wv": init_dense(ks[2], d, d, dtype),
+        "wg": init_dense(ks[3], d, d, dtype),
+        "wo": init_dense(ks[4], d, d, dtype),
+        # data-dependent decay: w_t = exp(-exp(w0 + lora(x)))
+        "w0": jnp.full((d,), -6.0, dtype),
+        "w_lora_a": init_dense(ks[5], d, LORA_RANK, dtype),
+        "w_lora_b": init_dense(ks[6], LORA_RANK, d, dtype, scale=0.01),
+        # per-channel bonus u
+        "u": jnp.zeros((d,), dtype),
+        # token-shift mix coefficients (static part of ddlerp)
+        "mix_r": jnp.full((d,), 0.5, dtype),
+        "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_v": jnp.full((d,), 0.5, dtype),
+        "mix_w": jnp.full((d,), 0.5, dtype),
+        # channel mix
+        "cm_mix": jnp.full((d,), 0.5, dtype),
+        "cm_k": init_dense(ks[7], d, cfg.d_ff, dtype),
+        "cm_v": init_dense(ks[8], cfg.d_ff, d, dtype),
+        "cm_r": init_dense(ks[9], d, d, dtype),
+    }
+    return p
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    return {
+        "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "shift_tm": jnp.zeros((batch, d), dtype),  # last token (time mix)
+        "shift_cm": jnp.zeros((batch, d), dtype),  # last token (channel mix)
+    }
+
+
+def _token_shift(x, prev):
+    """(B,S,d) -> previous-token tensor, seeded by carry ``prev`` (B,d)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _wkv_chunked(r, k, v, w, u, chunk: int, S0):
+    """Chunked linear-attention evaluation of the RWKV recurrence.
+
+    r,k,v: (B, S, H, D); w: (B, S, H, D) decay in (0,1); u: (H, D).
+    S0: (B, H, D, D) initial state. Returns (out (B,S,H,D), S_final).
+    """
+    B, S, H, D = r.shape
+    while S % chunk:
+        chunk -= 1
+    n = S // chunk
+
+    from repro.distributed.actsharding import shard_act
+
+    def reshape(x):
+        y = x.reshape(B, n, chunk, H, D).transpose(1, 0, 3, 2, 4)
+        # keep batch on DP and heads on TP through the transpose — GSPMD
+        # loses it here otherwise (45 GiB/dev of replicated temporaries)
+        return shard_act(y, None, "dp", "model", None, None)
+
+    r_, k_, v_, w_ = map(reshape, (r, k, v, w))  # (n,B,H,c,D)
+    logw = jnp.log(jnp.clip(w_.astype(jnp.float32), 1e-8, 1.0))
+    logw = shard_act(logw, None, "dp", "model", None, None)
+    cum = jnp.cumsum(logw, axis=3)  # P_t = prod_{tau<=t} w_tau (log space)
+    cum = shard_act(cum, None, "dp", "model", None, None)
+
+    def step(Sst, inputs):
+        rc, kc, vc, logwc, cumc = inputs  # (B,H,c,D)
+        rf = rc.astype(jnp.float32)
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        # decay-rescaled queries/keys (within-chunk, numerically safe:
+        # exponents are differences of cumsums within the chunk)
+        p_prev = cumc - logwc  # P_{t-1}
+        r_hat = rf * jnp.exp(p_prev)
+        k_hat = kf * jnp.exp(-cumc)
+        # inter-chunk: o_t += r_hat_t @ S_prev
+        o = jnp.einsum("bhtd,bhde->bhte", r_hat, Sst)
+        # intra-chunk: strictly-past tokens
+        att = jnp.einsum("bhtd,bhsd->bhts", r_hat, k_hat)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(mask[None, None], att, 0.0)
+        o = o + jnp.einsum("bhts,bhse->bhte", att, vf)
+        # current token bonus: r_t diag(u) k_t^T v_t
+        bonus = jnp.einsum("bhtd,hd,bhtd->bht", rf, u, kf)
+        o = o + bonus[..., None] * vf
+        # state update to end of chunk
+        p_end = cumc[:, :, -1:, :]  # (B,H,1,D)
+        k_tail = kf * jnp.exp(p_end - cumc)
+        S_new = Sst * jnp.exp(p_end.squeeze(2))[..., None] + jnp.einsum(
+            "bhtd,bhte->bhde", k_tail, vf
+        )
+        return S_new, o
+
+    inputs = (r_, k_, v_, logw, cum)
+    S_fin, outs = jax.lax.scan(step, S0.astype(jnp.float32), inputs)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, D)
+    return out.astype(r.dtype), S_fin
+
+
+def rwkv6_block(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, d) — already normed by the caller
+    state: Optional[dict] = None,
+    chunk: int = 64,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Time-mix block. Returns (y, new_state). state=None => fresh zeros,
+    state discarded (training); state given => carried (decode/prefill)."""
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    st = state or init_rwkv_state(cfg, B, x.dtype)
+
+    prev = _token_shift(x, st["shift_tm"].astype(x.dtype))
+
+    def mix(name):
+        m = params[f"mix_{name}"]
+        return x * m + prev * (1 - m)
+
+    r = dense(params["wr"], mix("r")).reshape(B, S, H, hd)
+    k = dense(params["wk"], mix("k")).reshape(B, S, H, hd)
+    v = dense(params["wv"], mix("v")).reshape(B, S, H, hd)
+    g = dense(params["wg"], x)
+    xw = mix("w")
+    w_log = params["w0"].astype(jnp.float32) + dense(
+        params["w_lora_b"], jnp.tanh(dense(params["w_lora_a"], xw))
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(B, S, H, hd)  # data-dependent decay
+    u = params["u"].astype(jnp.float32).reshape(H, hd)
+
+    out, S_fin = _wkv_chunked(r, k, v, w, u, chunk, st["S"])
+    y = dense(params["wo"], (out.reshape(B, S, d) * jax.nn.silu(g)))
+
+    new_state = None
+    if state is not None:
+        new_state = {
+            "S": S_fin,
+            "shift_tm": x[:, -1, :],
+            "shift_cm": state["shift_cm"],
+        }
+    return y, new_state
+
+
+def rwkv6_channel_mix(
+    params: dict, cfg: ModelConfig, x: jax.Array,
+    state: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Squared-ReLU channel mix with token shift."""
+    st = state or {"shift_cm": jnp.zeros((x.shape[0], x.shape[-1]), x.dtype)}
+    prev = _token_shift(x, st["shift_cm"].astype(x.dtype))
+    m = params["cm_mix"]
+    xk = x * m + prev * (1 - m)
+    kk = jnp.square(jax.nn.relu(dense(params["cm_k"], xk)))
+    rr = jax.nn.sigmoid(dense(params["cm_r"], xk))
+    y = rr * dense(params["cm_v"], kk)
+    new_state = None
+    if state is not None:
+        new_state = dict(state)
+        new_state["shift_cm"] = x[:, -1, :]
+    return y, new_state

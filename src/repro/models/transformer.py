@@ -1,0 +1,251 @@
+"""Block + stack: one residual block per layer kind (attn / rwkv6 / rglru),
+grouped into a lax.scan over pattern cycles.
+
+Scanning over layers is load-bearing at framework scale: a 96-layer config
+lowers to one rolled loop instead of 96 inlined copies, which keeps the
+dry-run compile time and HLO size sane for every assigned architecture.
+Heterogeneous stacks (recurrentgemma's rglru-rglru-attn cycle, deepseek's
+first dense layer) are handled as prologue / scanned-cycles / epilogue.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rwkv6 as rwkv6_mod
+from repro.models.attention import attention_block, init_attention, init_kv_cache
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_norm, init_mlp, init_norm, mlp
+from repro.models.moe import init_moe, moe_block
+from repro.models.rglru import init_rglru, init_rglru_state, rglru_block
+
+__all__ = ["init_block", "apply_block", "init_stack", "apply_stack",
+           "init_layer_cache", "StackLayout"]
+
+
+# ----------------------------------------------------------- single block ----
+def init_block(key, cfg: ModelConfig, kind: str, use_moe: bool, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"norm1": init_norm(cfg.d_model, cfg.norm, dtype)}
+    if kind == "attn":
+        p["inner"] = init_attention(ks[0], cfg, dtype)
+    elif kind == "rwkv6":
+        p["inner"] = rwkv6_mod.init_rwkv6(ks[0], cfg, dtype)
+    elif kind == "rglru":
+        p["inner"] = init_rglru(ks[0], cfg, dtype)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    p["norm2"] = init_norm(cfg.d_model, cfg.norm, dtype)
+    if kind != "rwkv6":  # rwkv6 carries its own channel mix in `inner`
+        if use_moe:
+            p["mlp"] = init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_kind,
+                                dtype, cfg.mlp_bias)
+    return p
+
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype) -> dict:
+    if kind == "attn":
+        return init_kv_cache(cfg, batch, max_len, dtype,
+                             window=cfg.local_window)
+    if kind == "rwkv6":
+        return rwkv6_mod.init_rwkv_state(cfg, batch, dtype)
+    if kind == "rglru":
+        return init_rglru_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def apply_block(
+    params: dict,
+    cfg: ModelConfig,
+    kind: str,
+    use_moe: bool,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Optional[dict],
+    cache_index: Optional[jax.Array],
+    attn_args: dict,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Pre-norm residual block. Returns (x, new_cache, aux_loss)."""
+    from repro.distributed.actsharding import shard_act
+
+    aux = jnp.zeros((), jnp.float32)
+    # (B, S, d) between blocks: batch on DP, sequence on TP (Megatron-SP)
+    x = shard_act(x, "dp", "sp", None)
+    h = apply_norm(params["norm1"], x, cfg.norm, cfg.norm_eps)
+    if kind == "attn":
+        y, new_cache = attention_block(
+            params["inner"], cfg, h, positions, cache, cache_index,
+            window=cfg.local_window, **attn_args,
+        )
+    elif kind == "rwkv6":
+        y, new_cache = rwkv6_mod.rwkv6_block(params["inner"], cfg, h, cache)
+    elif kind == "rglru":
+        y, new_cache = rglru_block(params["inner"], cfg, h, cache)
+    else:
+        raise ValueError(kind)
+    x = x + y
+
+    h = apply_norm(params["norm2"], x, cfg.norm, cfg.norm_eps)
+    if kind == "rwkv6":
+        y, new_cache = rwkv6_mod.rwkv6_channel_mix(params["inner"], cfg, h,
+                                                   new_cache)
+    elif use_moe:
+        y, mo_aux = moe_block(params["mlp"], cfg, h)
+        aux = aux + mo_aux
+    else:
+        y = mlp(params["mlp"], h, cfg.mlp_kind)
+    x = x + y
+    return x, new_cache, aux
+
+
+# ------------------------------------------------------------- the stack ----
+@dataclasses.dataclass(frozen=True)
+class StackLayout:
+    """How num_layers decomposes into prologue / scanned cycles / epilogue."""
+
+    pattern: Tuple[str, ...]
+    prologue: Tuple[int, ...]  # absolute layer indices
+    cycles: int
+    epilogue: Tuple[int, ...]
+
+    @classmethod
+    def build(cls, cfg: ModelConfig) -> "StackLayout":
+        P = len(cfg.layer_pattern)
+        pro = tuple(range(cfg.first_dense_layers))
+        rest = cfg.num_layers - len(pro)
+        cycles = rest // P
+        epi_start = len(pro) + cycles * P
+        return cls(
+            pattern=cfg.layer_pattern,
+            prologue=pro,
+            cycles=cycles,
+            epilogue=tuple(range(epi_start, cfg.num_layers)),
+        )
+
+    def kind_of(self, cfg: ModelConfig, layer: int) -> str:
+        return cfg.layer_kinds[layer]
+
+    def moe_of(self, cfg: ModelConfig, layer: int) -> bool:
+        return cfg.is_moe and layer >= cfg.first_dense_layers
+
+
+def init_stack(key, cfg: ModelConfig, dtype) -> dict:
+    lay = StackLayout.build(cfg)
+    P = len(lay.pattern)
+
+    def block_at(layer):
+        return init_block(jax.random.fold_in(key, layer), cfg,
+                          lay.kind_of(cfg, layer), lay.moe_of(cfg, layer),
+                          dtype)
+
+    params: dict = {"prologue": [block_at(l) for l in lay.prologue]}
+    body = []
+    base = len(lay.prologue)
+    for j in range(P):
+        per_cycle = [block_at(base + c * P + j) for c in range(lay.cycles)]
+        body.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_cycle)
+                    if per_cycle else None)
+    params["body"] = body
+    params["epilogue"] = [block_at(l) for l in lay.epilogue]
+    return params
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    lay = StackLayout.build(cfg)
+    P = len(lay.pattern)
+    mk = lambda l: init_layer_cache(cfg, lay.kind_of(cfg, l), batch, max_len,
+                                    dtype)
+    cache: dict = {"prologue": [mk(l) for l in lay.prologue]}
+    body = []
+    base = len(lay.prologue)
+    for j in range(P):
+        per_cycle = [mk(base + c * P + j) for c in range(lay.cycles)]
+        body.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_cycle)
+                    if per_cycle else None)
+    cache["body"] = body
+    cache["epilogue"] = [mk(l) for l in lay.epilogue]
+    return cache
+
+
+def apply_stack(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    attn_args: Optional[dict] = None,
+    remat: bool = False,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Run the full layer stack. Returns (x, new_cache, aux)."""
+    lay = StackLayout.build(cfg)
+    P = len(lay.pattern)
+    attn_args = attn_args or {}
+    aux = jnp.zeros((), jnp.float32)
+
+    def run(x, p, kind, use_moe, c):
+        fn = lambda xx, pp, cc: apply_block(
+            pp, cfg, kind, use_moe, xx, positions, cc, cache_index, attn_args
+        )
+        if remat:
+            fn = jax.checkpoint(fn)
+        return fn(x, p, c)
+
+    new_cache: dict = {"prologue": [], "body": [], "epilogue": []}
+
+    for i, l in enumerate(lay.prologue):
+        c = cache["prologue"][i] if cache is not None else None
+        x, nc, a = run(x, params["prologue"][i], lay.kind_of(cfg, l),
+                       lay.moe_of(cfg, l), c)
+        new_cache["prologue"].append(nc)
+        aux = aux + a
+
+    base = len(lay.prologue)
+    if lay.cycles > 0:
+        kinds = [lay.kind_of(cfg, base + j) for j in range(P)]
+        moes = [lay.moe_of(cfg, base + j) for j in range(P)]
+
+        if cache is None:
+
+            def cycle_fn(carry, pp):
+                xx, au = carry
+                for j in range(P):
+                    xx, _, a = run(xx, pp[j], kinds[j], moes[j], None)
+                    au = au + a
+                return (xx, au), None
+
+            (x, aux), _ = jax.lax.scan(cycle_fn, (x, aux),
+                                       tuple(params["body"]))
+            new_cache["body"] = [None] * P
+        else:
+
+            def cycle_fn(carry, xs):
+                xx, au = carry
+                pp, cc = xs
+                ncs = []
+                for j in range(P):
+                    xx, nc, a = run(xx, pp[j], kinds[j], moes[j], cc[j])
+                    au = au + a
+                    ncs.append(nc)
+                return (xx, au), tuple(ncs)
+
+            (x, aux), body_caches = jax.lax.scan(
+                cycle_fn, (x, aux),
+                (tuple(params["body"]), tuple(cache["body"])),
+            )
+            new_cache["body"] = list(body_caches)
+
+    for i, l in enumerate(lay.epilogue):
+        c = cache["epilogue"][i] if cache is not None else None
+        x, nc, a = run(x, params["epilogue"][i], lay.kind_of(cfg, l),
+                       lay.moe_of(cfg, l), c)
+        new_cache["epilogue"].append(nc)
+        aux = aux + a
+
+    return x, (new_cache if cache is not None else None), aux

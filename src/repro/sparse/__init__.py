@@ -1,0 +1,21 @@
+"""Sparse direct-solver substrate: fill-reducing ordering (geometric nested
+dissection — the structured-grid analogue of the paper's Metis), symbolic
+block factorization (block elimination tree / fill mask), and the blocked
+numerical Cholesky in JAX whose tiles are born MXU-aligned."""
+from repro.sparse.cholesky import block_cholesky, block_cholesky_flops
+from repro.sparse.ordering import nested_dissection_order, rcm_order
+from repro.sparse.symbolic import (
+    block_pattern,
+    block_symbolic_cholesky,
+    matrix_pattern_from_elems,
+)
+
+__all__ = [
+    "block_cholesky",
+    "block_cholesky_flops",
+    "block_pattern",
+    "block_symbolic_cholesky",
+    "matrix_pattern_from_elems",
+    "nested_dissection_order",
+    "rcm_order",
+]

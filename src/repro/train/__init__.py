@@ -1,0 +1,16 @@
+"""Training & serving substrate: optimizer, LM loss, train_step with
+gradient accumulation, prefill/decode serve steps."""
+from repro.train.optimizer import OptimizerConfig, adamw_init, adamw_update
+from repro.train.serve_step import make_decode_step, make_prefill_step
+from repro.train.train_step import TrainConfig, loss_fn, make_train_step
+
+__all__ = [
+    "OptimizerConfig",
+    "TrainConfig",
+    "adamw_init",
+    "adamw_update",
+    "loss_fn",
+    "make_decode_step",
+    "make_prefill_step",
+    "make_train_step",
+]

@@ -1,0 +1,66 @@
+"""Serving steps: prefill (build the cache from a prompt batch) and decode
+(one new token against the cache) — the two inference shapes of the
+assigned grid (prefill_32k lowers the prefill step, decode_32k / long_500k
+lower the decode step)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward, init_cache
+from repro.models.config import ModelConfig
+
+__all__ = ["make_prefill_step", "make_decode_step", "greedy_generate"]
+
+
+def make_prefill_step(cfg: ModelConfig, attn_args: dict | None = None):
+    """prefill(params, batch, cache) -> (last_logits, cache)."""
+
+    def prefill(params, batch, cache):
+        logits, cache, _ = forward(
+            params, cfg, batch, cache=cache,
+            cache_index=jnp.asarray(0, jnp.int32), attn_args=attn_args,
+            last_only=True,
+        )
+        return logits[:, -1, :], cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, attn_args: dict | None = None):
+    """decode(params, tokens (B,1), cache, index) -> (logits (B,V), cache)."""
+
+    def decode(params, tokens, cache, index):
+        logits, cache, _ = forward(
+            params, cfg, {"tokens": tokens}, cache=cache, cache_index=index,
+            attn_args=attn_args,
+        )
+        return logits[:, 0, :], cache
+
+    return decode
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt: jax.Array,
+                    steps: int, max_len: int | None = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Greedy decoding loop (examples/serving driver). Returns
+    (generated (B, steps), logits of last step)."""
+    B, S = prompt.shape
+    max_len = max_len or (S + steps)
+    cache = init_cache(cfg, B, max_len)
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+
+    logits, cache = prefill(params, {"tokens": prompt}, cache)
+    out = []
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    for t in range(steps):
+        out.append(tok)
+        if t == steps - 1:
+            break
+        logits, cache = decode(params, tok, cache,
+                               jnp.asarray(S + t, jnp.int32))
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1), logits

@@ -1,0 +1,10 @@
+"""Test-wide config.
+
+x64 is enabled for the numerical-linear-algebra substrate (FEM / Cholesky /
+FETI convergence checks need it). Model code passes explicit dtypes so the
+LM smoke tests are unaffected. Device count stays at 1 — only the dry-run
+launcher (a separate process) requests 512 placeholder devices.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,148 @@
+"""Per-architecture smoke tests: every assigned arch instantiates a reduced
+config of the same family and runs one forward + one train step on CPU,
+asserting output shapes and no NaNs. The FETI archs run one reduced solve.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) — see launch/dryrun.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FetiArchConfig, get_config, get_smoke_config, list_archs
+from repro.data import synthetic_batch
+from repro.models import forward, init_model
+from repro.train import OptimizerConfig, TrainConfig, adamw_init, make_train_step
+
+LM_ARCHS = [a for a in list_archs() if not a.startswith("feti")]
+FETI_ARCHS = [a for a in list_archs() if a.startswith("feti")]
+
+# exact assigned numbers, re-stated so a config edit can't silently drift
+EXPECTED_FULL = {
+    "qwen2-vl-2b": dict(num_layers=28, d_model=1536, num_heads=12,
+                        num_kv_heads=2, d_ff=8960, vocab_size=151936),
+    "granite-3-8b": dict(num_layers=40, d_model=4096, num_heads=32,
+                         num_kv_heads=8, d_ff=12800, vocab_size=49155),
+    "nemotron-4-340b": dict(num_layers=96, d_model=18432, num_heads=96,
+                            num_kv_heads=8, d_ff=73728, vocab_size=256000,
+                            mlp_kind="squared_relu"),
+    "qwen1.5-32b": dict(num_layers=64, d_model=5120, num_heads=40,
+                        num_kv_heads=40, d_ff=27392, vocab_size=152064,
+                        qkv_bias=True),
+    "mistral-large-123b": dict(num_layers=88, d_model=12288, num_heads=96,
+                               num_kv_heads=8, d_ff=28672, vocab_size=32768),
+    "recurrentgemma-2b": dict(num_layers=26, d_model=2560, num_heads=10,
+                              num_kv_heads=1, d_ff=7680, vocab_size=256000),
+    "rwkv6-1.6b": dict(num_layers=24, d_model=2048, d_ff=7168,
+                       vocab_size=65536, attn_kind="none"),
+    "grok-1-314b": dict(num_layers=64, d_model=6144, num_heads=48,
+                        num_kv_heads=8, d_ff=32768, vocab_size=131072,
+                        num_experts=8, top_k=2),
+    "deepseek-v2-236b": dict(num_layers=60, d_model=5120, num_heads=128,
+                             vocab_size=102400, attn_kind="mla",
+                             kv_lora_rank=512, num_experts=160, top_k=6,
+                             num_shared_experts=2, moe_d_ff=1536),
+    "hubert-xlarge": dict(num_layers=48, d_model=1280, num_heads=16,
+                          num_kv_heads=16, d_ff=5120, vocab_size=504,
+                          causal=False),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_FULL))
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    for field, want in EXPECTED_FULL[arch].items():
+        assert getattr(cfg, field) == want, (arch, field)
+
+
+def test_param_counts_in_expected_range():
+    """Analytic parameter counts must land near the advertised sizes."""
+    expected_b = {
+        "qwen2-vl-2b": (1.2, 2.6),
+        "granite-3-8b": (6.5, 9.5),
+        "nemotron-4-340b": (300, 380),
+        "qwen1.5-32b": (28, 36),
+        "mistral-large-123b": (110, 135),
+        "recurrentgemma-2b": (2.0, 3.3),
+        "rwkv6-1.6b": (1.3, 2.2),
+        "grok-1-314b": (280, 345),
+        "deepseek-v2-236b": (200, 260),
+        "hubert-xlarge": (0.7, 1.3),
+    }
+    for arch, (lo, hi) in expected_b.items():
+        n = get_config(arch).param_count() / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B not in [{lo},{hi}]"
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.family == get_config(arch).family
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    batch = synthetic_batch(cfg, B, S, seed=0)
+
+    logits, _, aux = forward(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), "NaN/inf logits"
+
+    tcfg = TrainConfig(optimizer=OptimizerConfig(learning_rate=1e-3,
+                                                 warmup_steps=1,
+                                                 total_steps=10),
+                       remat=False)
+    step = make_train_step(cfg, tcfg)
+    opt = adamw_init(params, tcfg.optimizer)
+    params2, opt, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # parameters actually moved
+    moved = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert moved
+
+
+@pytest.mark.parametrize("arch", [a for a in LM_ARCHS
+                                  if a not in ("hubert-xlarge",)])
+def test_smoke_decode_step(arch):
+    """One decode step with a cache (encoder-only archs have none)."""
+    from repro.models import init_cache
+
+    cfg = get_smoke_config(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    B = 2
+    cache = init_cache(cfg, B, 8)
+    batch = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["positions"] = jnp.zeros((B, 1, 3), jnp.int32)
+    logits, cache, _ = forward(params, cfg, batch, cache=cache,
+                               cache_index=jnp.asarray(0, jnp.int32))
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", FETI_ARCHS)
+def test_smoke_feti_solve(arch):
+    from repro.core import SchurAssemblyConfig
+    from repro.fem import decompose_heat_problem
+    from repro.feti import FetiSolver
+
+    fc = get_smoke_config(arch)
+    assert isinstance(fc, FetiArchConfig)
+    prob = decompose_heat_problem(fc.dim, fc.sub_grid, fc.elems_per_sub)
+    cfg = SchurAssemblyConfig(
+        trsm_variant=fc.trsm_variant, syrk_variant=fc.syrk_variant,
+        block_size=fc.block_size, rhs_block_size=fc.rhs_block_size,
+    )
+    sol = FetiSolver(prob, cfg).solve(tol=1e-9)
+    assert sol.converged
+    u_ref = prob.reference_solution()
+    np.testing.assert_allclose(sol.u_global, u_ref,
+                               atol=1e-6 * max(abs(u_ref).max(), 1))
+
+
+def test_long_context_applicability_flags():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md §5)."""
+    subq = {a for a in LM_ARCHS if get_config(a).is_subquadratic}
+    assert subq == {"rwkv6-1.6b", "recurrentgemma-2b"}

@@ -1,0 +1,125 @@
+"""Unit + property tests for the stepped-shape analysis (paper §3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import stepped as sp
+from repro.testing import random_feti_like_bt
+
+
+def test_column_pivots_basic():
+    pat = np.array(
+        [
+            [0, 1, 0, 0],
+            [1, 0, 0, 0],
+            [0, 1, 1, 0],
+        ]
+    )
+    piv = sp.column_pivots(pat)
+    assert piv.tolist() == [1, 0, 2, 3]  # empty column -> n
+
+
+def test_row_trails_basic():
+    pat = np.array(
+        [
+            [0, 1, 0, 0],
+            [0, 0, 0, 0],
+            [1, 1, 1, 0],
+        ]
+    )
+    assert sp.row_trails(pat).tolist() == [1, -1, 2]
+
+
+def test_stepped_permutation_sorts_pivots():
+    rng = np.random.default_rng(0)
+    pat = rng.random((40, 17)) < 0.1
+    piv = sp.column_pivots(pat)
+    perm = sp.stepped_permutation(piv)
+    assert np.all(np.diff(piv[perm]) >= 0)
+
+
+def test_meta_widths_monotone_and_consistent():
+    rng = np.random.default_rng(1)
+    Bt = random_feti_like_bt(100, 37, rng)
+    meta = sp.build_stepped_meta(Bt != 0, block_size=16, rhs_block_size=8)
+    assert np.all(np.diff(meta.widths) >= 0)
+    assert meta.widths[-1] <= meta.m
+    # width at the last row counts every non-empty column
+    nonempty = int((meta.pivots < meta.n).sum())
+    assert meta.width_at_row(meta.n - 1) == nonempty
+    # col_starts non-decreasing because pivots are sorted
+    assert np.all(np.diff(meta.col_starts) >= 0)
+
+
+def test_meta_blocks_cover_exactly():
+    rng = np.random.default_rng(2)
+    Bt = random_feti_like_bt(53, 21, rng)  # deliberately non-multiple sizes
+    meta = sp.build_stepped_meta(Bt != 0, block_size=16, rhs_block_size=8)
+    rows = [meta.row_block(k) for k in range(meta.num_row_blocks)]
+    assert rows[0][0] == 0 and rows[-1][1] == meta.n
+    assert all(a[1] == b[0] for a, b in zip(rows, rows[1:]))
+    cols = [meta.col_block(c) for c in range(meta.num_col_blocks)]
+    assert cols[0][0] == 0 and cols[-1][1] == meta.m
+
+
+def test_flop_model_splitting_never_exceeds_dense():
+    rng = np.random.default_rng(3)
+    Bt = random_feti_like_bt(128, 64, rng)
+    meta = sp.build_stepped_meta(Bt != 0, block_size=16)
+    assert meta.flops_trsm_rhs_split() <= meta.flops_trsm_dense()
+    assert meta.flops_syrk_input_split() <= meta.flops_syrk_dense()
+    assert meta.flops_syrk_output_split() <= meta.flops_syrk_dense()
+
+
+def test_theoretical_speedup_perfect_triangle():
+    """Paper §4.3: for a perfectly triangular RHS the dense-variant speedup
+    of both TRSM and SYRK tends to 3 (prism/pyramid volume ratio)."""
+    n = m = 3000
+    pat = np.tril(np.ones((n, m), dtype=bool))  # pivot of col j at row j
+    meta = sp.build_stepped_meta(pat, block_size=10, presorted=True)
+    tr_speedup = meta.flops_trsm_dense() / meta.flops_trsm_rhs_split()
+    sy_speedup = meta.flops_syrk_dense() / meta.flops_syrk_input_split()
+    assert tr_speedup == pytest.approx(3.0, rel=0.05)
+    assert sy_speedup == pytest.approx(3.0, rel=0.05)
+
+
+def test_shared_envelope_is_conservative():
+    rng = np.random.default_rng(4)
+    metas = []
+    pats = []
+    for _ in range(4):
+        Bt = random_feti_like_bt(64, 32, rng)
+        pats.append(Bt != 0)
+        metas.append(sp.build_stepped_meta(Bt != 0, block_size=16))
+    env = sp.shared_envelope(metas)
+    for me in metas:
+        assert np.all(env.widths >= me.widths)
+        assert np.all(env.col_starts <= me.col_starts)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(8, 96),
+    m=st.integers(1, 48),
+    density=st.floats(0.01, 0.4),
+    bs=st.integers(4, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_meta_invariants(n, m, density, bs, seed):
+    rng = np.random.default_rng(seed)
+    pat = rng.random((n, m)) < density
+    meta = sp.build_stepped_meta(pat, block_size=bs)
+    # permuted pivots sorted
+    assert np.all(np.diff(meta.pivots) >= 0)
+    # perm/inv_perm are inverse bijections
+    assert np.array_equal(meta.perm[meta.inv_perm], np.arange(m))
+    assert np.array_equal(meta.inv_perm[meta.perm], np.arange(m))
+    # widths consistent with pivots
+    for k in range(meta.num_row_blocks):
+        _, end = meta.row_block(k)
+        assert meta.widths[k] == int((meta.pivots < end).sum())
+    # the permuted pattern really is stepped: zeros above pivots
+    pp = pat[:, meta.perm]
+    for j in range(m):
+        if meta.pivots[j] < n:
+            assert not pp[: meta.pivots[j], j].any()

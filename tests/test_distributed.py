@@ -1,0 +1,181 @@
+"""Distribution substrate: sharding rules, checkpoint atomicity + elastic
+restore, straggler monitor, gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.distributed import (
+    ElasticPlan,
+    StragglerMonitor,
+    available_steps,
+    batch_spec,
+    bf16_compress,
+    cache_shardings,
+    latest_step,
+    make_int8_error_feedback,
+    param_shardings,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.distributed.sharding import _spec_for_param
+from repro.models import init_cache, init_model
+
+
+class FakeMesh:
+    """Shape-only stand-in so sharding *rules* are testable on 1 device."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _arr(*shape):
+    return jnp.zeros(shape, jnp.float32)
+
+
+def test_spec_attention_weights():
+    # (d, H*hd): FSDP on d, TP on heads
+    assert _spec_for_param(MESH, "stack/body/0/inner/wq/w", _arr(4096, 4096)) \
+        == P("data", "model")
+    # stacked scan axis stays unsharded
+    assert _spec_for_param(MESH, "stack/body/0/inner/wq/w",
+                           _arr(10, 4096, 4096)) == P(None, "data", "model")
+    # output projection: TP on input dim
+    assert _spec_for_param(MESH, "stack/body/0/inner/wo/w", _arr(4096, 4096)) \
+        == P("model", "data")
+
+
+def test_spec_embed_and_head():
+    assert _spec_for_param(MESH, "embed", _arr(49152, 4096)) == P("model", "data")
+    assert _spec_for_param(MESH, "lm_head", _arr(4096, 49152)) == P("data", "model")
+
+
+def test_spec_moe_experts_ep_when_divisible():
+    # deepseek-like: 160 experts over model axis
+    assert _spec_for_param(MESH, "stack/body/0/mlp/wi", _arr(160, 5120, 1536)) \
+        == P("model", "data", None)
+    # grok-like: 8 experts -> EP impossible, TP falls back to ff dim
+    assert _spec_for_param(MESH, "stack/body/0/mlp/wi", _arr(8, 6144, 32768)) \
+        == P(None, "data", "model")
+    assert _spec_for_param(MESH, "stack/body/0/mlp/wo", _arr(8, 32768, 6144)) \
+        == P(None, "model", "data")
+
+
+def test_spec_indivisible_degrades_to_replication():
+    # odd dims: nothing divides -> fully replicated, never an error
+    assert _spec_for_param(MESH, "stack/body/0/inner/wq/w", _arr(37, 53)) \
+        == P(None, None)
+
+
+def test_spec_norms_replicated():
+    assert _spec_for_param(MESH, "stack/body/0/norm1/scale", _arr(4096)) == P(None)
+
+
+def test_batch_spec_multi_pod():
+    assert batch_spec(MESH3) == P(("pod", "data"))
+    assert batch_spec(MESH) == P(("data",))
+
+
+def test_param_shardings_cover_real_model():
+    """Every leaf of a real (smoke) param tree gets a sharding without
+    raising; biggest leaves must not be fully replicated on the big mesh."""
+    cfg = get_smoke_config("deepseek-v2-236b")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tree = param_shardings(mesh, params)
+    assert len(jax.tree.leaves(tree, is_leaf=lambda x: hasattr(x, "spec"))) \
+        == len(jax.tree.leaves(params))
+
+
+def test_cache_shardings_seq_axis():
+    cfg = get_smoke_config("granite-3-8b")
+    cache = init_cache(cfg, batch=2, max_len=32)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tree = cache_shardings(mesh, cache)
+    leaves = jax.tree.leaves(tree, is_leaf=lambda x: hasattr(x, "spec"))
+    assert leaves  # all leaves got specs
+
+
+# ------------------------------------------------------------ checkpoint ----
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    d = str(tmp_path)
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": [jnp.ones((4,), jnp.bfloat16), jnp.zeros((), jnp.int32)]}
+    for s in (1, 2, 3, 4):
+        save_checkpoint(d, s, tree, keep=2)
+    assert available_steps(d) == [3, 4]
+    assert latest_step(d) == 4
+    got, step = restore_checkpoint(d, tree)
+    assert step == 4
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_atomicity_no_tmp_left(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 7, {"x": jnp.ones((3,))})
+    assert not any(n.endswith(".tmp") for n in os.listdir(d))
+
+
+def test_checkpoint_elastic_restore_new_sharding(tmp_path):
+    """Restore onto a different mesh layout (elastic restart)."""
+    d = str(tmp_path)
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    save_checkpoint(d, 1, tree)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    from jax.sharding import NamedSharding
+
+    sh = {"w": NamedSharding(mesh, P("data", "model"))}
+    got, _ = restore_checkpoint(d, tree, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(tree["w"]))
+    assert got["w"].sharding.spec == P("data", "model")
+
+
+# ------------------------------------------------------- fault tolerance ----
+def test_straggler_monitor_flags_slow_host():
+    mon = StragglerMonitor(num_hosts=4, window=4, threshold=1.5)
+    for _ in range(4):
+        for h in range(4):
+            mon.record(h, 1.0 if h != 2 else 3.0)
+    assert mon.stragglers() == [2]
+    assert mon.healthy_hosts() == 3
+
+
+def test_elastic_plan_power_of_two():
+    plan = ElasticPlan(total_hosts=64, hosts_per_pod=8)
+    out = plan.plan(surviving_hosts=49)  # 6 whole pods survive
+    assert out["pods"] == 4  # largest pow2 <= 6
+    assert out["global_batch_scale"] == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------- compression ----
+def test_bf16_compress_close():
+    g = {"w": jnp.linspace(-1, 1, 64, dtype=jnp.float32)}
+    c = bf16_compress(g)
+    np.testing.assert_allclose(np.asarray(c["w"]), np.asarray(g["w"]),
+                               rtol=1e-2, atol=1e-2)
+    assert c["w"].dtype == jnp.float32
+
+
+def test_int8_error_feedback_converges_in_mean():
+    """Accumulated compressed gradients converge to accumulated truth."""
+    params = {"w": jnp.zeros((32,), jnp.float32)}
+    transform, state = make_int8_error_feedback(params)
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal(32), jnp.float32) * 1e-3
+    acc_c = np.zeros(32)
+    for _ in range(50):
+        c, state = transform({"w": g_true}, state)
+        acc_c += np.asarray(c["w"])
+    np.testing.assert_allclose(acc_c, 50 * np.asarray(g_true),
+                               rtol=0.05, atol=1e-4)

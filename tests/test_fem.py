@@ -1,0 +1,124 @@
+"""FEM substrate tests: meshes, stiffness, loads, decomposition invariants."""
+import numpy as np
+import pytest
+
+from repro.fem import (
+    assemble_dense,
+    assemble_scipy_csr,
+    decompose_heat_problem,
+    fixing_node_regularization,
+    kernel_basis,
+    load_vector,
+    p1_element_stiffness,
+    structured_mesh,
+)
+
+
+def test_mesh_2d_counts_and_area():
+    mesh = structured_mesh((4, 3))
+    assert mesh.n_nodes == 5 * 4
+    assert mesh.n_elems == 4 * 3 * 2
+    # triangles tile the unit square
+    p = mesh.coords[mesh.elems]
+    d = np.swapaxes(p[:, 1:, :] - p[:, :1, :], 1, 2)
+    area = np.abs(np.linalg.det(d)) / 2
+    assert np.isclose(area.sum(), 1.0)
+
+
+def test_mesh_3d_counts_and_volume():
+    mesh = structured_mesh((2, 3, 2))
+    assert mesh.n_nodes == 3 * 4 * 3
+    assert mesh.n_elems == 2 * 3 * 2 * 6
+    p = mesh.coords[mesh.elems]
+    d = np.swapaxes(p[:, 1:, :] - p[:, :1, :], 1, 2)
+    vol = np.abs(np.linalg.det(d)) / 6
+    assert np.isclose(vol.sum(), 1.0)
+    assert np.all(vol > 0)
+
+
+@pytest.mark.parametrize("shape", [(3, 3), (2, 2, 2)])
+def test_stiffness_spsd_with_constant_kernel(shape):
+    mesh = structured_mesh(shape)
+    Ke = p1_element_stiffness(mesh.coords, mesh.elems)
+    K = np.asarray(assemble_dense(mesh.n_nodes, mesh.elems, Ke))
+    # symmetric
+    np.testing.assert_allclose(K, K.T, atol=1e-12)
+    # constants in the kernel (pure Neumann Laplace)
+    np.testing.assert_allclose(K @ np.ones(mesh.n_nodes), 0.0, atol=1e-10)
+    # PSD with exactly one zero eigenvalue
+    w = np.linalg.eigvalsh(K)
+    assert w[0] > -1e-10
+    assert w[0] < 1e-10 < w[1]
+
+
+def test_assemble_dense_matches_scipy():
+    mesh = structured_mesh((4, 2))
+    Ke = p1_element_stiffness(mesh.coords, mesh.elems)
+    Kd = np.asarray(assemble_dense(mesh.n_nodes, mesh.elems, Ke))
+    Ks = assemble_scipy_csr(mesh.n_nodes, mesh.elems, np.asarray(Ke)).toarray()
+    np.testing.assert_allclose(Kd, Ks, atol=1e-12)
+
+
+def test_load_vector_integrates_source():
+    mesh = structured_mesh((5, 5))
+    f = np.asarray(load_vector(mesh.coords, mesh.elems, mesh.n_nodes, source=3.0))
+    assert np.isclose(f.sum(), 3.0)  # integral of the source over unit square
+
+
+def test_regularization_makes_spd_and_generalized_inverse():
+    mesh = structured_mesh((3, 3))
+    Ke = p1_element_stiffness(mesh.coords, mesh.elems)
+    K = np.asarray(assemble_dense(mesh.n_nodes, mesh.elems, Ke))
+    Kreg = fixing_node_regularization(K, fixing_node=4)
+    w = np.linalg.eigvalsh(Kreg)
+    assert w[0] > 1e-10
+    # K Kreg^{-1} K == K  (exact generalized inverse — DESIGN.md §2)
+    KpK = K @ np.linalg.solve(Kreg, K)
+    np.testing.assert_allclose(KpK, K, rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("dim,sub_grid,eps", [
+    (2, (2, 2), (3, 3)),
+    (2, (3, 2), (2, 4)),
+    (3, (2, 2, 2), (2, 2, 2)),
+])
+def test_decomposition_invariants(dim, sub_grid, eps):
+    prob = decompose_heat_problem(dim, sub_grid, eps)
+    assert prob.n_subdomains == int(np.prod(sub_grid))
+    n_i = prob.subdomains[0].n
+    assert n_i == int(np.prod([e + 1 for e in eps]))
+
+    # each multiplier id is used by the right number of subdomain columns
+    counts = np.zeros(prob.n_lambda + 1, dtype=int)
+    for sd in prob.subdomains:
+        used = sd.lambda_ids[: sd.m]
+        counts[used] += 1
+        # padded tail points at the dummy slot
+        assert np.all(sd.lambda_ids[sd.m :] == prob.n_lambda)
+        # each real column has exactly one ±1 entry
+        col_nnz = (sd.Bt[:, : sd.m] != 0).sum(axis=0)
+        assert np.all(col_nnz == 1)
+        assert np.all(sd.Bt[:, sd.m :] == 0)
+    counts = counts[:-1]
+    assert np.all((counts == 1) | (counts == 2))  # Dirichlet rows: 1; gluing: 2
+
+    # gluing rows sum to zero across subdomains: B @ (1 ... 1 stacked u)
+    # with u = the *same* global field restricted to each subdomain -> B u = c = 0
+    u_glob = np.arange(prob.global_mesh.n_nodes, dtype=float)
+    r = np.zeros(prob.n_lambda + 1)
+    for sd in prob.subdomains:
+        u_i = u_glob[sd.node_gids]
+        np.add.at(r, sd.lambda_ids, sd.Bt.T @ u_i)
+    gluing = counts == 2
+    np.testing.assert_allclose(r[:-1][gluing], 0.0, atol=1e-9)
+
+
+def test_decomposition_dirichlet_rows_touch_x0_face():
+    prob = decompose_heat_problem(2, (2, 1), (2, 2))
+    # x=0 face has (Gy+1) = 3 nodes; left subdomains only
+    assert len(prob.dirichlet_gids) == 3
+
+
+def test_kernel_basis_is_unit_norm():
+    r = kernel_basis(16)
+    assert np.isclose(np.linalg.norm(r), 1.0)

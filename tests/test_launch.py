@@ -1,0 +1,167 @@
+"""Launch-layer tests: roofline HLO parsing (incl. while-loop trip-count
+correction), the analytic FLOP/byte model, shape-grid rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.analytic import lm_cell_counts
+from repro.launch.roofline import (
+    HW,
+    collective_stats_trip_corrected,
+    parse_collective_bytes,
+    roofline_terms,
+)
+from repro.launch.shapes import SHAPES, applicable_shapes, input_specs
+
+FAKE_HLO = """\
+HloModule jit_f, is_scheduled=true
+
+%cond.1 (arg: (s32[], f32[64,64])) -> pred[] {
+  %arg = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body.1 (arg: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %arg = (s32[], f32[64,64]) parameter(0)
+  %x = f32[64,64] get-tuple-element(%arg), index=1
+  %ag = f32[64,64]{1,0} all-gather(%x), dimensions={0}
+  %i = s32[] get-tuple-element(%arg), index=0
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[64,64]) tuple(%ip, %ag)
+}
+
+ENTRY %main (p0: f32[64,64]) -> f32[64,64] {
+  %p0 = f32[64,64] parameter(0)
+  %ar = f32[64,64]{1,0} all-reduce(%p0), to_apply=%add.0
+  %init = (s32[], f32[64,64]) tuple(s32[] constant(0), %ar)
+  %w = (s32[], f32[64,64]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[64,64] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_parse_collective_bytes_flat():
+    st = parse_collective_bytes(FAKE_HLO)
+    assert st.count_by_op["all-gather"] == 1
+    assert st.count_by_op["all-reduce"] == 1
+    assert st.bytes_by_op["all-gather"] == 64 * 64 * 4
+    assert st.bytes_by_op["all-reduce"] == 64 * 64 * 4
+
+
+def test_trip_corrected_multiplies_loop_bodies():
+    st = collective_stats_trip_corrected(FAKE_HLO)
+    # the all-gather sits in a 10-trip while body; the all-reduce is direct
+    assert st.count_by_op["all-gather"] == 10
+    assert st.bytes_by_op["all-gather"] == 10 * 64 * 64 * 4
+    assert st.count_by_op["all-reduce"] == 1
+
+
+def test_trip_corrected_on_real_compiled_scan():
+    def body(c, _):
+        return jnp.tanh(c @ c), None
+
+    def f(x):
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    txt = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    ).compile().as_text()
+    # no collectives on 1 device, but the parser must not crash and the
+    # while/cond structure must be discovered
+    st = collective_stats_trip_corrected(txt)
+    assert st.total_bytes == 0
+
+
+def test_roofline_terms_dominance():
+    from repro.launch.roofline import CollectiveStats
+
+    coll = CollectiveStats(bytes_by_op={"all-reduce": int(50e9)},
+                           count_by_op={"all-reduce": 1})
+    r = roofline_terms({"flops": 197e12 * 0.1, "bytes accessed": 819e9 * 0.2},
+                       coll, chips=256, model_flops=None)
+    assert r.compute_s == pytest.approx(0.1)
+    assert r.memory_s == pytest.approx(0.2)
+    assert r.collective_s == pytest.approx(1.0)
+    assert r.dominant == "collective"
+
+
+# ------------------------------------------------------------- analytic ----
+def _counts(arch, shape, **kw):
+    cfg = get_config(arch)
+    args = dict(chips=256, tp=16, grad_accum=1, remat=True,
+                moment_bytes=4, accum_bytes=4)
+    args.update(kw)
+    if "cfg_override" in args:
+        cfg = args.pop("cfg_override")
+    return cfg, lm_cell_counts(cfg, SHAPES[shape], **args)
+
+
+def test_analytic_skip_masked_halves_attention():
+    _, full = _counts("granite-3-8b", "prefill_32k")
+    _, skip = _counts("granite-3-8b", "prefill_32k", skip_masked=True)
+    ratio = skip.notes["attention"] / full.notes["attention"]
+    assert 0.45 < ratio < 0.56  # ~ (n+1)/2n of chunk pairs
+
+
+def test_analytic_sort_moe_removes_dispatch_flops():
+    import dataclasses
+
+    cfg = get_config("deepseek-v2-236b")
+    gshard = lm_cell_counts(cfg, SHAPES["prefill_32k"], chips=256, tp=16,
+                            grad_accum=1, remat=False, moment_bytes=4,
+                            accum_bytes=4)
+    sort = lm_cell_counts(dataclasses.replace(cfg, moe_impl="sort"),
+                          SHAPES["prefill_32k"], chips=256, tp=16,
+                          grad_accum=1, remat=False, moment_bytes=4,
+                          accum_bytes=4)
+    assert sort.notes["moe"] < 0.01 * gshard.notes["moe"]
+
+
+def test_analytic_train_counts_remat_pass():
+    _, c = _counts("granite-3-8b", "train_4k", remat=True)
+    _, c_no = _counts("granite-3-8b", "train_4k", remat=False)
+    assert c.notes["fwd_passes"] == 4.0 and c_no.notes["fwd_passes"] == 3.0
+    assert c.flops_global == pytest.approx(c_no.flops_global * 4 / 3)
+
+
+def test_analytic_model_flops_is_6nd_for_train():
+    cfg, c = _counts("granite-3-8b", "train_4k")
+    tokens = 256 * 4096
+    assert c.model_flops == pytest.approx(
+        6.0 * cfg.active_param_count() * tokens)
+
+
+def test_analytic_decode_memory_includes_cache():
+    cfg, c = _counts("mistral-large-123b", "decode_32k")
+    assert c.notes["cache_stream_dev"] > 0
+    # decode must be memory-dominated in the model
+    assert c.hbm_bytes_per_dev / HW["hbm_bw"] > c.flops_per_dev / HW["peak_flops"]
+
+
+# ---------------------------------------------------------------- shapes ----
+def test_applicable_shapes_rules():
+    assert applicable_shapes(get_config("hubert-xlarge")) == \
+        ["train_4k", "prefill_32k"]
+    assert "long_500k" in applicable_shapes(get_config("rwkv6-1.6b"))
+    assert "long_500k" not in applicable_shapes(get_config("granite-3-8b"))
+
+
+def test_input_specs_are_abstract():
+    cfg = get_config("qwen2-vl-2b")
+    specs = input_specs(cfg, SHAPES["train_4k"])
+    assert specs["tokens"].shape == (256, 4096)
+    assert specs["positions"].shape == (256, 4096, 3)
+    for v in specs.values():
+        assert isinstance(v, jax.ShapeDtypeStruct)
+
+
+def test_audio_specs_have_features():
+    cfg = get_config("hubert-xlarge")
+    specs = input_specs(cfg, SHAPES["prefill_32k"])
+    assert specs["features"].shape == (32, 32768, 1280)

@@ -1,0 +1,282 @@
+"""Model-stack correctness: flash attention vs naive softmax, chunked RWKV6
+vs naive recurrence, RG-LRU associative scan vs sequential, MoE dispatch,
+and prefill+decode consistency across families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, forward, init_cache, init_model
+from repro.models.attention import flash_attention
+from repro.models.layers import apply_mrope, apply_rope
+from repro.models.moe import init_moe, moe_block
+from repro.models.rglru import _lru_scan
+from repro.models.rwkv6 import _wkv_chunked
+
+
+# ------------------------------------------------------------ attention ----
+def _naive_attention(q, k, v, causal, window=0, scale=None):
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = scale or D ** -0.5
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q * scale, kk)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+
+
+@pytest.mark.parametrize("causal,window,skip", [
+    (True, 0, False),
+    (True, 0, True),
+    (False, 0, False),
+    (True, 8, False),
+])
+def test_flash_attention_matches_naive(causal, window, skip):
+    rng = np.random.default_rng(0)
+    B, S, Hq, Hkv, D = 2, 64, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    got = flash_attention(q, k, v, pos, pos, causal=causal, window=window,
+                          q_chunk=16, kv_chunk=16, skip_masked_blocks=skip)
+    want = _naive_attention(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_ragged_chunks():
+    """Sizes that don't divide the chunk hint must still be exact."""
+    rng = np.random.default_rng(1)
+    B, S, H, D = 1, 48, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    got = flash_attention(q, k, v, pos, pos, causal=True, q_chunk=13, kv_chunk=7)
+    want = _naive_attention(q, k, v, True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ----------------------------------------------------------------- rope ----
+def test_rope_relative_shift_invariance():
+    """RoPE scores depend only on relative positions."""
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((1, 4, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 4, 1, 16)), jnp.float32)
+    p0 = jnp.arange(4, dtype=jnp.int32)[None]
+    p1 = p0 + 100
+    s0 = jnp.einsum("bqhd,bkhd->bqk", apply_rope(q, p0, 1e4), apply_rope(k, p0, 1e4))
+    s1 = jnp.einsum("bqhd,bkhd->bqk", apply_rope(q, p1, 1e4), apply_rope(k, p1, 1e4))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), rtol=1e-4, atol=1e-4)
+
+
+def test_mrope_equals_rope_for_text():
+    """With equal (t,h,w) positions M-RoPE must reduce to plain RoPE."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, 8, 2, 32)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32), (2, 8))
+    pos3 = jnp.broadcast_to(pos[..., None], (2, 8, 3))
+    got = apply_mrope(x, pos3, 1e4, (4, 6, 6))
+    want = apply_rope(x, pos, 1e4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- rwkv6 ----
+def _wkv_naive(r, k, v, w, u, S0):
+    B, S, H, D = r.shape
+    out = np.zeros((B, S, H, D), np.float64)
+    St = np.asarray(S0, np.float64).copy()
+    r_, k_, v_, w_ = (np.asarray(t, np.float64) for t in (r, k, v, w))
+    u_ = np.asarray(u, np.float64)
+    for t in range(S):
+        kv = np.einsum("bhd,bhe->bhde", k_[:, t], v_[:, t])
+        out[:, t] = np.einsum("bhd,bhde->bhe", r_[:, t], St + u_[None, :, :, None] * kv)
+        St = w_[:, t][..., None] * St + kv
+    return out, St
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 32])
+def test_rwkv6_chunked_matches_naive(chunk):
+    rng = np.random.default_rng(4)
+    B, S, H, D = 2, 32, 2, 8
+    r = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32) * 0.5
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32) * 0.5
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32) * 0.5
+    w = jnp.asarray(rng.uniform(0.5, 0.99, (B, S, H, D)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((H, D)), jnp.float32) * 0.1
+    S0 = jnp.asarray(rng.standard_normal((B, H, D, D)), jnp.float32) * 0.1
+    got, S_fin = _wkv_chunked(r, k, v, w, u, chunk, S0)
+    want, S_want = _wkv_naive(r, k, v, w, u, S0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S_fin), S_want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- rg-lru ----
+def test_lru_scan_matches_sequential():
+    rng = np.random.default_rng(5)
+    B, S, W = 2, 37, 8
+    a = jnp.asarray(rng.uniform(0.5, 0.999, (B, S, W)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((B, S, W)), jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((B, W)), jnp.float32)
+    got = np.asarray(_lru_scan(a, u, h0))
+    h = np.asarray(h0, np.float64)
+    a_, u_ = np.asarray(a, np.float64), np.asarray(u, np.float64)
+    for t in range(S):
+        h = a_[:, t] * h + u_[:, t]
+        np.testing.assert_allclose(got[:, t], h, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------- moe ----
+def test_moe_single_expert_equals_dense_swiglu():
+    cfg = ModelConfig(name="t", family="moe", num_layers=1, d_model=16,
+                      d_ff=32, vocab_size=7, num_heads=2, num_kv_heads=2,
+                      num_experts=1, top_k=1, moe_d_ff=32,
+                      capacity_factor=4.0, dtype="float32",
+                      param_dtype="float32")
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16), jnp.float32)
+    y, aux = moe_block(p, cfg, x)
+    want = jnp.einsum(
+        "bsf,fd->bsd",
+        jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wg"][0]))
+        * jnp.einsum("bsd,df->bsf", x, p["wi"][0]),
+        p["wo"][0],
+    )
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    assert np.isfinite(float(aux))
+
+
+def test_moe_routes_and_balances():
+    cfg = ModelConfig(name="t", family="moe", num_layers=1, d_model=16,
+                      d_ff=32, vocab_size=7, num_heads=2, num_kv_heads=2,
+                      num_experts=4, top_k=2, moe_d_ff=16,
+                      capacity_factor=2.0, dtype="float32",
+                      param_dtype="float32")
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16), jnp.float32)
+    y, aux = moe_block(p, cfg, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux) > 0
+
+
+# ----------------------------------------------- prefill/decode parity ----
+FAMS = {
+    "gqa": dict(family="dense", num_layers=2, d_model=32, d_ff=64,
+                vocab_size=31, num_heads=4, num_kv_heads=2),
+    "mla": dict(family="moe", num_layers=2, d_model=32, d_ff=64, vocab_size=31,
+                num_heads=2, attn_kind="mla", q_lora_rank=16, kv_lora_rank=8,
+                qk_nope_head_dim=8, qk_rope_head_dim=4, v_head_dim=8),
+    "rwkv6": dict(family="ssm", num_layers=2, d_model=32, d_ff=64,
+                  vocab_size=31, layer_pattern=("rwkv6",), attn_kind="none",
+                  rwkv_head_dim=8),
+    "hybrid": dict(family="hybrid", num_layers=3, d_model=32, d_ff=64,
+                   vocab_size=31, num_heads=2, num_kv_heads=1,
+                   layer_pattern=("rglru", "rglru", "attn"), local_window=8,
+                   lru_width=32),
+}
+
+
+@pytest.mark.parametrize("fam", sorted(FAMS))
+def test_prefill_then_decode_matches_full_forward(fam):
+    cfg = ModelConfig(name=fam, dtype="float32", param_dtype="float32",
+                      **FAMS[fam])
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+
+    full_logits, _, _ = forward(params, cfg, {"tokens": toks})
+
+    cache = init_cache(cfg, B, 16)
+    pre_logits, cache, _ = forward(
+        params, cfg, {"tokens": toks[:, : S - 1]}, cache=cache,
+        cache_index=jnp.asarray(0, jnp.int32),
+    )
+    np.testing.assert_allclose(
+        np.asarray(pre_logits, np.float64),
+        np.asarray(full_logits[:, : S - 1], np.float64),
+        rtol=2e-3, atol=2e-3,
+    )
+    dec_logits, cache, _ = forward(
+        params, cfg, {"tokens": toks[:, S - 1 :]}, cache=cache,
+        cache_index=jnp.asarray(S - 1, jnp.int32),
+    )
+    np.testing.assert_allclose(
+        np.asarray(dec_logits[:, 0], np.float64),
+        np.asarray(full_logits[:, S - 1], np.float64),
+        rtol=2e-3, atol=2e-3,
+    )
+
+
+def test_ring_buffer_local_attention_decode():
+    """Hybrid decode beyond the window: ring cache must match a full-cache
+    run restricted to the window."""
+    cfg = ModelConfig(name="h", dtype="float32", param_dtype="float32",
+                      **FAMS["hybrid"])
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 24  # window is 8, cache ring is 8 slots
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+    full_logits, _, _ = forward(params, cfg, {"tokens": toks})
+
+    cache = init_cache(cfg, B, 8)
+    logits = None
+    for t in range(S):
+        logits, cache, _ = forward(
+            params, cfg, {"tokens": toks[:, t : t + 1]}, cache=cache,
+            cache_index=jnp.asarray(t, jnp.int32),
+        )
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0], np.float64),
+        np.asarray(full_logits[:, -1], np.float64),
+        rtol=5e-3, atol=5e-3,
+    )
+
+
+def test_moe_sort_dispatch_matches_gshard():
+    """With capacity ample (no drops) the sort/gather dispatch must equal
+    the GShard one-hot-einsum dispatch exactly."""
+    import dataclasses
+
+    base = ModelConfig(name="t", family="moe", num_layers=1, d_model=16,
+                       d_ff=32, vocab_size=7, num_heads=2, num_kv_heads=2,
+                       num_experts=4, top_k=2, moe_d_ff=16,
+                       num_shared_experts=1, capacity_factor=8.0,
+                       dtype="float32", param_dtype="float32")
+    p = init_moe(jax.random.PRNGKey(0), base, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16), jnp.float32)
+    y_gshard, aux_g = moe_block(p, base, x)
+    y_sort, aux_s = moe_block(
+        p, dataclasses.replace(base, moe_impl="sort"), x)
+    np.testing.assert_allclose(np.asarray(y_sort), np.asarray(y_gshard),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(float(aux_s), float(aux_g), rtol=1e-6)
+
+
+def test_moe_sort_dispatch_capacity_drops_bounded():
+    """With tight capacity the sort path must stay finite and bounded."""
+    import dataclasses
+
+    cfg = ModelConfig(name="t", family="moe", num_layers=1, d_model=16,
+                      d_ff=32, vocab_size=7, num_heads=2, num_kv_heads=2,
+                      num_experts=4, top_k=2, moe_d_ff=16,
+                      capacity_factor=0.5, moe_impl="sort",
+                      dtype="float32", param_dtype="float32")
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16), jnp.float32)
+    y, aux = moe_block(p, cfg, x)
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.abs(np.asarray(y)).max() < 1e3

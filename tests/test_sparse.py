@@ -1,0 +1,110 @@
+"""Sparse substrate tests: ordering, symbolic block fill, blocked Cholesky."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.fem import assemble_dense, p1_element_stiffness, structured_mesh
+from repro.fem.regularization import fixing_node_regularization
+from repro.sparse import (
+    block_cholesky,
+    block_cholesky_flops,
+    block_pattern,
+    block_symbolic_cholesky,
+    matrix_pattern_from_elems,
+    nested_dissection_order,
+    rcm_order,
+)
+from repro.testing import random_banded_spd
+
+
+@pytest.mark.parametrize("shape", [(5, 5), (9, 9), (4, 6), (3, 3, 3), (5, 4, 3)])
+def test_nd_order_is_permutation(shape):
+    perm = nested_dissection_order(shape)
+    n = int(np.prod(shape))
+    assert sorted(perm.tolist()) == list(range(n))
+
+
+@pytest.mark.parametrize("shape", [(5, 5), (3, 4, 3)])
+def test_rcm_order_is_permutation(shape):
+    perm = rcm_order(shape)
+    n = int(np.prod(shape))
+    assert sorted(perm.tolist()) == list(range(n))
+
+
+def _subdomain_K(shape):
+    mesh = structured_mesh(tuple(s - 1 for s in shape))  # shape = node grid
+    Ke = p1_element_stiffness(mesh.coords, mesh.elems)
+    K = np.asarray(assemble_dense(mesh.n_nodes, mesh.elems, Ke))
+    return mesh, fixing_node_regularization(K, fixing_node=0)
+
+
+def test_nd_reduces_fill_vs_natural():
+    """Scalar-granularity fill: ND must beat the natural (banded) order on a
+    grid large enough for the separator structure to pay off."""
+    shape = (17, 17)
+    mesh, K = _subdomain_K(shape)
+    pat = matrix_pattern_from_elems(K.shape[0], mesh.elems)
+
+    def fill(perm):
+        p = pat[perm][:, perm]
+        return block_symbolic_cholesky(block_pattern(p, 1)).sum()
+
+    natural = fill(np.arange(K.shape[0]))
+    nd = fill(nested_dissection_order(shape))
+    assert nd < natural
+
+
+def test_symbolic_fill_covers_numeric_fill():
+    """Every numerically nonzero block of L must be in the symbolic mask."""
+    shape = (7, 7)
+    mesh, K = _subdomain_K(shape)
+    perm = nested_dissection_order(shape)
+    Kp = K[perm][:, perm]
+    bs = 8
+    pat = matrix_pattern_from_elems(K.shape[0], mesh.elems)[perm][:, perm]
+    mask = block_symbolic_cholesky(block_pattern(pat, bs))
+    L = np.linalg.cholesky(Kp)
+    nb = mask.shape[0]
+    for i in range(nb):
+        for j in range(i + 1):
+            i0, i1 = i * bs, min((i + 1) * bs, L.shape[0])
+            j0, j1 = j * bs, min((j + 1) * bs, L.shape[0])
+            if np.any(np.abs(L[i0:i1, j0:j1]) > 1e-12):
+                assert mask[i, j], f"numeric nnz outside symbolic mask at {(i, j)}"
+
+
+@pytest.mark.parametrize("n,bs", [(32, 8), (50, 16), (64, 64), (33, 7)])
+def test_block_cholesky_dense_matches_lapack(n, bs):
+    rng = np.random.default_rng(0)
+    K = random_banded_spd(n, min(n - 1, 12), rng)
+    L = np.asarray(block_cholesky(jnp.asarray(K), bs))
+    want = np.linalg.cholesky(K)
+    np.testing.assert_allclose(L, want, rtol=1e-9, atol=1e-9)
+
+
+def test_block_cholesky_masked_matches_dense():
+    shape = (7, 7)
+    mesh, K = _subdomain_K(shape)
+    perm = nested_dissection_order(shape)
+    Kp = K[perm][:, perm]
+    bs = 8
+    pat = matrix_pattern_from_elems(K.shape[0], mesh.elems)[perm][:, perm]
+    mask = block_symbolic_cholesky(block_pattern(pat, bs))
+    L = np.asarray(block_cholesky(jnp.asarray(Kp), bs, mask=mask))
+    want = np.linalg.cholesky(Kp)
+    np.testing.assert_allclose(L, want, rtol=1e-8, atol=1e-8)
+    # masked flop model <= dense flop model
+    assert block_cholesky_flops(Kp.shape[0], bs, mask) <= block_cholesky_flops(
+        Kp.shape[0], bs
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(8, 48), bs=st.integers(2, 16), seed=st.integers(0, 2**31 - 1))
+def test_property_block_cholesky(n, bs, seed):
+    rng = np.random.default_rng(seed)
+    K = random_banded_spd(n, min(n - 1, 8), rng)
+    L = np.asarray(block_cholesky(jnp.asarray(K), bs))
+    np.testing.assert_allclose(L @ L.T, K, rtol=1e-8, atol=1e-8)
+    assert np.allclose(L, np.tril(L))
