@@ -7,6 +7,7 @@ Emits ``name,us_per_call,derived`` CSV rows. Mapping to the paper:
     bench_variants    — Fig. 6 (TRSM/SYRK splitting variants + pruning)
     bench_kernels     — Fig. 7 (pure-kernel speedups vs dense baseline)
     bench_assembly    — Fig. 8 (whole SC assembly, sep/mix)
+    bench_autotune    — Table 1 made automatic (autotuned vs hand vs dense)
     bench_feti        — Figs. 9 & 10 (FETI preprocessing + amortization)
     bench_lm          — assigned-architecture step smoke timings
 """
@@ -23,6 +24,7 @@ MODULES = [
     "bench_variants",
     "bench_kernels",
     "bench_assembly",
+    "bench_autotune",
     "bench_feti",
     "bench_lm",
 ]

@@ -6,6 +6,8 @@ Public API:
   * TRSM variants (RHS / factor splitting + pruning): :mod:`repro.core.trsm`
   * SYRK variants (input / output splitting): :mod:`repro.core.syrk`
   * the assembly pipeline + config: :mod:`repro.core.schur`
+  * the plan autotuner + content-addressed plan cache:
+    :mod:`repro.core.autotune` (``plan`` façade below)
 """
 from repro.core.schur import (
     SchurAssemblyConfig,
@@ -24,10 +26,26 @@ from repro.core.stepped import (
 )
 from repro.core.syrk import syrk_dense, syrk_input_split, syrk_output_split
 from repro.core.trsm import trsm_dense, trsm_factor_split, trsm_rhs_split
+from repro.core.autotune import (
+    Plan,
+    assembly_cost,
+    enumerate_space,
+    plan_assembly,
+    plan_from_builder,
+)
+
+# the façade: `from repro.core import plan; plan(bt_pattern).cfg`
+plan = plan_assembly
 
 __all__ = [
+    "Plan",
     "SchurAssemblyConfig",
     "SteppedMeta",
+    "assembly_cost",
+    "enumerate_space",
+    "plan",
+    "plan_assembly",
+    "plan_from_builder",
     "assemble_schur",
     "assembly_flops",
     "build_stepped_meta",

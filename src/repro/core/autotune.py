@@ -1,0 +1,599 @@
+"""Assembly autotuner: pick the SC-assembly plan the paper picks by hand.
+
+The paper's central empirical result (Table 1, Figs. 5-6) is that the best
+TRSM/SYRK splitting variant AND the best block size depend on the input
+sparsity pattern — the authors choose them per machine and per mesh. This
+module turns that manual choice into a planner:
+
+  1. **Enumerate** the full ``SchurAssemblyConfig`` design space: 3 TRSM
+     variants x 3 SYRK variants x candidate block sizes x pruning on/off x
+     Pallas kernels on/off (structural duplicates are canonicalized away —
+     e.g. ``prune`` only distinguishes ``factor_split`` TRSM).
+  2. **Score** every candidate with the existing FLOP model
+     (:func:`repro.core.schur.assembly_flops`) plus a byte-traffic and
+     launch-count model (below), fed through the roofline cost model of
+     :mod:`repro.launch.roofline` (``DeviceModel.time_s``).
+  3. Optionally **measure** the top-k candidates (plus the dense baseline)
+     with real timed micro-runs on synthetic data carrying the exact
+     sparsity pattern (``measure="auto"``), and pick the fastest.
+  4. **Cache** the winning plan in a content-addressed on-disk cache keyed
+     by a fingerprint of the sparsity pattern + device kind, so multi-step
+     simulations and repeat launches pay the search once.
+
+See docs/autotuning.md for the cost model derivation, the cache-key
+contents, and how to pin a plan for reproducibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.schur import (
+    SYRK_VARIANTS,
+    TRSM_VARIANTS,
+    SchurAssemblyConfig,
+    assembly_flops,
+    make_assembler,
+    schur_dense_baseline,
+)
+from repro.core.stepped import SteppedMeta, build_stepped_meta
+from repro.launch.roofline import DeviceModel, detect_device
+
+__all__ = [
+    "Plan",
+    "plan_assembly",
+    "plan_from_builder",
+    "enumerate_space",
+    "assembly_cost",
+    "assembly_bytes",
+    "pattern_fingerprint",
+    "default_block_sizes",
+    "plan_cache_dir",
+    "clear_plan_cache",
+]
+
+# Bump when the candidate space or the cost model changes shape: stale
+# cached plans from an older search must not be served for the new one.
+SPACE_VERSION = 1
+
+# Pallas kernels only run natively on TPU; elsewhere they fall back to
+# interpret mode, which is orders of magnitude slower. The model multiplies
+# pallas-candidate times by this on non-TPU devices so they are enumerated
+# (full design space) but never win off-TPU.
+_INTERPRET_PENALTY = 200.0
+
+_F64 = 8  # assembly dtype bytes (the FETI substrate runs f64)
+
+
+# --------------------------------------------------------------------------
+# byte-traffic + launch-count model (complements SteppedMeta's FLOP model)
+# --------------------------------------------------------------------------
+
+def _trsm_bytes_ops(meta: SteppedMeta, cfg: SchurAssemblyConfig,
+                    block_mask: Optional[np.ndarray], db: int
+                    ) -> Tuple[float, int]:
+    n, m = meta.n, meta.m
+    if cfg.use_pallas and cfg.trsm_variant != "dense":
+        # single fused launch; streams padded L, Linv and B/Y once
+        n_pad = meta.num_row_blocks * meta.block_size
+        m_pad = meta.num_col_blocks * meta.rhs_block_size
+        return db * (n_pad * n_pad / 2 + n_pad * meta.block_size
+                     + 2 * n_pad * m_pad), 1
+    if cfg.trsm_variant == "dense":
+        return db * (n * n / 2 + 2 * n * m), 1
+    if cfg.trsm_variant == "rhs_split":
+        total, ops = 0.0, 0
+        for c in range(meta.num_col_blocks):
+            c0, c1 = meta.col_block(c)
+            s = int(meta.col_starts[c])
+            if s >= n:
+                continue
+            nn = n - s
+            total += db * (nn * nn / 2 + 2 * nn * (c1 - c0))
+            ops += 1
+        return total, ops
+    # factor_split
+    total, ops = 0.0, 0
+    nb = meta.num_row_blocks
+    mask = np.asarray(block_mask) if (cfg.prune and block_mask is not None) \
+        else None
+    for k in range(nb):
+        r0, r1 = meta.row_block(k)
+        b = r1 - r0
+        w = int(meta.widths[k])
+        if w == 0:
+            continue
+        total += db * (b * b / 2 + 2 * b * w)  # diagonal TRSM
+        ops += 1
+        if r1 >= n:
+            continue
+        if mask is None:
+            total += db * ((n - r1) * b + 2 * (n - r1) * w)
+            ops += 1
+        else:
+            for i in range(k + 1, nb):
+                if not mask[i, k]:
+                    continue
+                i0, i1 = meta.row_block(i)
+                total += db * ((i1 - i0) * b + 2 * (i1 - i0) * w)
+                ops += 1
+    return total, ops
+
+
+def _syrk_bytes_ops(meta: SteppedMeta, cfg: SchurAssemblyConfig,
+                    db: int) -> Tuple[float, int]:
+    n, m = meta.n, meta.m
+    if cfg.use_pallas and cfg.syrk_variant != "dense":
+        n_pad = meta.num_row_blocks * meta.block_size
+        m_pad = meta.num_col_blocks * meta.rhs_block_size
+        return db * (n_pad * m_pad + m_pad * m_pad), 1
+    if cfg.syrk_variant == "dense":
+        return db * (n * m + m * m), 1
+    if cfg.syrk_variant == "input_split":
+        total, ops = 0.0, 0
+        for k in range(meta.num_row_blocks):
+            r0, r1 = meta.row_block(k)
+            w = int(meta.widths[k])
+            if w == 0:
+                continue
+            # read the row block + read-modify-write the w x w accumulator:
+            # this term is what penalizes small blocks for input_split
+            total += db * ((r1 - r0) * w + 2 * w * w)
+            ops += 1
+        return total, ops
+    # output_split
+    total, ops = 0.0, 0
+    for i in range(meta.num_col_blocks):
+        i0, i1 = meta.col_block(i)
+        s = int(meta.col_starts[i])
+        if s >= n:
+            continue
+        ci = i1 - i0
+        total += db * ((n - s) * ci + ci * ci)
+        ops += 1
+        if i0 > 0:
+            total += db * ((n - s) * i0 + 2 * ci * i0)
+            ops += 1
+    return total, ops
+
+
+def assembly_bytes(meta: SteppedMeta, cfg: SchurAssemblyConfig,
+                   block_mask: Optional[np.ndarray] = None,
+                   dtype_bytes: int = _F64) -> dict:
+    """Estimated main-memory traffic (bytes) and dispatched-op counts."""
+    tb, to = _trsm_bytes_ops(meta, cfg, block_mask, dtype_bytes)
+    sb, so = _syrk_bytes_ops(meta, cfg, dtype_bytes)
+    return {"trsm": tb, "syrk": sb, "total": tb + sb,
+            "trsm_ops": to, "syrk_ops": so, "ops": to + so}
+
+
+def assembly_cost(meta: SteppedMeta, cfg: SchurAssemblyConfig,
+                  device: DeviceModel,
+                  block_mask: Optional[np.ndarray] = None,
+                  dtype_bytes: int = _F64) -> dict:
+    """Roofline time estimate of one assembly under ``cfg`` on ``device``.
+
+    FLOPs come from the paper-validated model (:func:`assembly_flops`);
+    bytes and launch counts from :func:`assembly_bytes`; both are combined
+    by ``DeviceModel.time_s``. Pallas candidates off-TPU get the interpret
+    penalty (they are enumerated, but cannot win).
+    """
+    fl = assembly_flops(meta, cfg)
+    by = assembly_bytes(meta, cfg, block_mask, dtype_bytes)
+    trsm_s = device.time_s(fl["trsm"], by["trsm"], by["trsm_ops"])
+    syrk_s = device.time_s(fl["syrk"], by["syrk"], by["syrk_ops"])
+    total = trsm_s + syrk_s
+    if cfg.use_pallas and device.kind != "tpu":
+        total *= _INTERPRET_PENALTY
+    return {"trsm_s": trsm_s, "syrk_s": syrk_s, "total_s": total,
+            "flops": fl["total"], "bytes": by["total"], "ops": by["ops"]}
+
+
+# --------------------------------------------------------------------------
+# candidate enumeration
+# --------------------------------------------------------------------------
+
+def default_block_sizes(n: int) -> Tuple[int, ...]:
+    """Candidate factor block sizes for an n-row factor: powers of two in
+    the paper's sweep range (Fig. 5 sweeps ~100..2000; MXU wants 128-ish),
+    clipped to the problem size."""
+    cands = [b for b in (8, 16, 32, 64, 128, 256) if b <= n]
+    return tuple(cands) if cands else (max(1, n),)
+
+
+def enumerate_space(block_sizes: Sequence[int],
+                    interpret: bool = False) -> list[SchurAssemblyConfig]:
+    """The full Table-1 design space, canonicalized.
+
+    3 TRSM x 3 SYRK x |block_sizes| x prune on/off x pallas on/off, minus
+    structural duplicates: ``prune`` only affects non-pallas
+    ``factor_split`` TRSM, and ``use_pallas`` is an identity when both
+    variants are "dense" (the pallas kernels only cover split variants).
+    """
+    out = []
+    for bs in block_sizes:
+        for tv in TRSM_VARIANTS:
+            for sv in SYRK_VARIANTS:
+                prunes = (False, True) if tv == "factor_split" else (False,)
+                for prune in prunes:
+                    out.append(SchurAssemblyConfig(
+                        trsm_variant=tv, syrk_variant=sv, block_size=bs,
+                        prune=prune, use_pallas=False))
+                if tv == "dense" and sv == "dense":
+                    continue
+                out.append(SchurAssemblyConfig(
+                    trsm_variant=tv, syrk_variant=sv, block_size=bs,
+                    prune=False, use_pallas=True, interpret=interpret))
+    return out
+
+
+# --------------------------------------------------------------------------
+# content-addressed plan cache
+# --------------------------------------------------------------------------
+
+def plan_cache_dir() -> str:
+    """Cache root: ``$REPRO_PLAN_CACHE`` or ``~/.cache/repro/plans``."""
+    root = os.environ.get("REPRO_PLAN_CACHE")
+    if not root:
+        root = os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                            "plans")
+    return root
+
+
+def clear_plan_cache() -> int:
+    """Delete every cached plan; returns the number removed."""
+    root = plan_cache_dir()
+    if not os.path.isdir(root):
+        return 0
+    removed = 0
+    for fn in os.listdir(root):
+        if fn.endswith(".json"):
+            os.remove(os.path.join(root, fn))
+            removed += 1
+    return removed
+
+
+def pattern_fingerprint(pivots: np.ndarray, n: int, m: int,
+                        extra: Sequence[np.ndarray] = ()) -> str:
+    """Content hash of what the cost model can see of a sparsity pattern.
+
+    The stepped pipeline's cost is fully determined by the column pivots
+    (plus factor structure, passed via ``extra`` when pruning matters) —
+    two B-transpose patterns with identical pivots assemble identically, so
+    they deliberately share a plan-cache entry.
+    """
+    h = hashlib.sha256()
+    h.update(f"{n}:{m}:".encode())
+    h.update(np.ascontiguousarray(pivots, dtype=np.int64).tobytes())
+    for a in extra:
+        h.update(b"|")
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
+
+
+def _cache_key(fingerprint: str, device: DeviceModel,
+               block_sizes: Sequence[int], measured: bool) -> str:
+    # `measured` is part of the key: a model-only plan must never be served
+    # to a measure="auto" caller (it would silently skip the measured
+    # refinement and its never-slower-than-dense guarantee), nor vice versa
+    h = hashlib.sha256()
+    h.update(f"v{SPACE_VERSION}:{device.kind}:{fingerprint}:"
+             f"{int(measured)}:".encode())
+    h.update(",".join(str(b) for b in sorted(block_sizes)).encode())
+    return h.hexdigest()
+
+
+# --------------------------------------------------------------------------
+# the plan
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Plan:
+    """A chosen assembly configuration plus its cost accounting.
+
+    ``predicted_s`` is the roofline-model estimate, ``measured_s`` the
+    median timed micro-run (None when ``measure="never"`` or on cache
+    hits from model-only searches). ``baseline_*`` are the same numbers
+    for the dense baseline of [9] for speedup reporting.
+    """
+
+    cfg: SchurAssemblyConfig
+    predicted_s: float
+    measured_s: Optional[float]
+    baseline_predicted_s: float
+    baseline_measured_s: Optional[float]
+    device: str
+    key: str
+    candidates: int
+    from_cache: bool = False
+
+    @property
+    def predicted_speedup(self) -> float:
+        return self.baseline_predicted_s / max(self.predicted_s, 1e-30)
+
+    @property
+    def measured_speedup(self) -> Optional[float]:
+        if self.measured_s is None or self.baseline_measured_s is None:
+            return None
+        return self.baseline_measured_s / max(self.measured_s, 1e-30)
+
+    def summary(self) -> str:
+        c = self.cfg
+        lines = [
+            f"plan[{self.device}] trsm={c.trsm_variant} "
+            f"syrk={c.syrk_variant} block={c.block_size} "
+            f"rhs_block={c.rhs_bs} prune={c.prune} pallas={c.use_pallas}"
+            f"{' (cached)' if self.from_cache else ''}",
+            f"  predicted {self.predicted_s * 1e6:9.1f}us  "
+            f"(dense baseline {self.baseline_predicted_s * 1e6:.1f}us, "
+            f"{self.predicted_speedup:.2f}x) over "
+            f"{self.candidates} candidates",
+        ]
+        if self.measured_s is not None:
+            base = ("" if self.baseline_measured_s is None else
+                    f"  (dense baseline {self.baseline_measured_s * 1e6:.1f}"
+                    f"us, {self.measured_speedup:.2f}x)")
+            lines.append(
+                f"  measured  {self.measured_s * 1e6:9.1f}us{base}")
+        return "\n".join(lines)
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["cfg"] = dataclasses.asdict(self.cfg)
+        d.pop("from_cache")
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Plan":
+        d = dict(d)
+        d["cfg"] = SchurAssemblyConfig(**d["cfg"])
+        return cls(**d, from_cache=True)
+
+
+def _load_cached(key: str) -> Optional[Plan]:
+    path = os.path.join(plan_cache_dir(), key + ".json")
+    try:
+        with open(path) as f:
+            return Plan.from_json(json.load(f))
+    except (OSError, ValueError, TypeError, KeyError):
+        return None
+
+
+def _store(plan: Plan) -> None:
+    root = plan_cache_dir()
+    try:
+        os.makedirs(root, exist_ok=True)
+        tmp = os.path.join(root, f".{plan.key}.tmp.{os.getpid()}")
+        with open(tmp, "w") as f:
+            json.dump(plan.to_json(), f, indent=1)
+        os.replace(tmp, os.path.join(root, plan.key + ".json"))
+    except OSError:
+        pass  # cache is best-effort; planning correctness never depends on it
+
+
+# --------------------------------------------------------------------------
+# timed micro-runs
+# --------------------------------------------------------------------------
+
+def _synthesize_inputs(meta: SteppedMeta, seed: int = 0):
+    """Timing probes with the exact sparsity pattern; values are never
+    consumed numerically, only their shapes/pattern drive the schedule."""
+    rng = np.random.default_rng(seed)
+    n, m = meta.n, meta.m
+    L = np.tril(rng.standard_normal((n, n))) * 0.05
+    np.fill_diagonal(L, 1.0 + rng.random(n))
+    piv_orig = meta.pivots[meta.inv_perm]
+    Bt = np.zeros((n, m))
+    cols = np.flatnonzero(piv_orig < n)
+    Bt[piv_orig[cols], cols] = rng.choice([-1.0, 1.0], size=len(cols))
+    return L, Bt
+
+
+def _time_best(fn, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Min-of-reps wall time: the minimum is the standard microbenchmark
+    estimator under one-sided interference noise (shared containers)."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# --------------------------------------------------------------------------
+# the planner
+# --------------------------------------------------------------------------
+
+MetaBuilder = Callable[
+    [int, int], Tuple[SteppedMeta, Optional[np.ndarray]]
+]  # (block_size, rhs_block_size) -> (meta, block_mask)
+
+
+def plan_from_builder(
+    meta_builder: MetaBuilder,
+    fingerprint: str,
+    *,
+    block_sizes: Optional[Sequence[int]] = None,
+    n_hint: Optional[int] = None,
+    measure: str = "auto",
+    top_k: int = 8,
+    device: Optional[DeviceModel] = None,
+    cache: bool = True,
+    reps: int = 5,
+) -> Plan:
+    """Core search: builder-parameterized so the cluster path can score the
+    true *envelope* metadata it will execute with (see feti.assembly).
+
+    ``measure``: "auto" refines the model's top-k with timed micro-runs
+    ("never"/"model" skips them — pure roofline ranking). Pallas candidates
+    are measured only on TPU (interpret timing is meaningless).
+    """
+    if measure not in ("auto", "never", "model"):
+        raise ValueError(f"measure must be auto|never|model, got {measure!r}")
+    device = device or detect_device()
+
+    probe_meta, _ = meta_builder(8, 8) if n_hint is None else (None, None)
+    n = n_hint if n_hint is not None else probe_meta.n
+    if block_sizes is None:
+        block_sizes = default_block_sizes(n)
+
+    key = _cache_key(fingerprint, device, block_sizes,
+                     measured=(measure == "auto"))
+    if cache:
+        hit = _load_cached(key)
+        if hit is not None:
+            return hit
+
+    interpret = device.kind != "tpu"
+    candidates = enumerate_space(block_sizes, interpret=interpret)
+
+    # score every candidate with the roofline model; metas/masks are shared
+    # per (block_size, rhs_block_size) so the builder runs once per size
+    built: dict[tuple, tuple] = {}
+    scored = []
+    for cfg in candidates:
+        bk = (cfg.block_size, cfg.rhs_bs)
+        if bk not in built:
+            built[bk] = meta_builder(*bk)
+        meta, mask = built[bk]
+        cost = assembly_cost(meta, cfg, device, block_mask=mask)
+        scored.append((cost["total_s"], cfg, meta, mask))
+    scored.sort(key=lambda t: t[0])
+
+    dense_cfg = SchurAssemblyConfig(
+        trsm_variant="dense", syrk_variant="dense",
+        block_size=min(block_sizes), prune=False)
+    bk = (dense_cfg.block_size, dense_cfg.rhs_bs)
+    if bk not in built:
+        built[bk] = meta_builder(*bk)
+    dense_meta, dense_mask = built[bk]
+    baseline_pred = assembly_cost(
+        dense_meta, dense_cfg, device, block_mask=dense_mask)["total_s"]
+
+    best_s, best_cfg, best_meta, best_mask = scored[0]
+    measured_s = baseline_meas = None
+
+    if measure == "auto":
+        import jax
+        import jax.numpy as jnp
+
+        Lh, Bth = _synthesize_inputs(dense_meta)
+        L = jnp.asarray(Lh)
+        Bt = jnp.asarray(Bth)
+        # throwaway run first: spins up BLAS threads / clock governors so
+        # whichever candidate happens to be timed first isn't penalized
+        jax.block_until_ready(schur_dense_baseline(L, Bt))
+        baseline_meas = _time_best(
+            jax.jit(schur_dense_baseline), L, Bt, reps=reps)
+
+        def _measure(t):
+            _, cfg, meta, mask = t
+            if cfg.is_dense_baseline:
+                # byte-identical program to schur_dense_baseline (the
+                # permutation-skip fast path) — reuse its timing
+                return baseline_meas
+            assembler = jax.jit(make_assembler(meta, cfg, mask))
+            return _time_best(assembler, L, Bt, reps=reps)
+
+        # Two-stage measured refinement. The roofline model is only trusted
+        # to rank candidates WITHIN a variant family (it can misjudge a
+        # whole family's library/backend constant), so:
+        #   stage 1 — time the model-best candidate of every (trsm, syrk)
+        #             pair; dense/dense is one of them, so the chosen plan
+        #             can never be slower than the baseline it reports;
+        #   stage 2 — sweep the winning pair across its remaining block
+        #             sizes / prune toggles (the Fig. 5 axis), bounded by
+        #             top_k.
+        runnable = [t for t in scored
+                    if not (t[1].use_pallas and device.kind != "tpu")]
+        stage1: dict = {}
+        for t in runnable:  # runnable is model-score sorted
+            pair = (t[1].trsm_variant, t[1].syrk_variant)
+            stage1.setdefault(pair, t)
+        results = [(_measure(t), t) for t in stage1.values()]
+        _, win = min(results, key=lambda r: r[0])
+        win_pair = (win[1].trsm_variant, win[1].syrk_variant)
+        stage2 = [t for t in runnable
+                  if (t[1].trsm_variant, t[1].syrk_variant) == win_pair
+                  and t is not stage1[win_pair]][:top_k]
+        results += [(_measure(t), t) for t in stage2]
+
+        best_meas, (best_s, best_cfg, best_meta, best_mask) = \
+            min(results, key=lambda r: r[0])
+        measured_s = best_meas
+        if baseline_meas < best_meas:
+            # noise guard: never ship a plan measured slower than dense
+            best_s, best_cfg = baseline_pred, dense_cfg
+            measured_s = baseline_meas
+
+    plan = Plan(
+        cfg=best_cfg,
+        predicted_s=float(best_s),
+        measured_s=measured_s,
+        baseline_predicted_s=float(baseline_pred),
+        baseline_measured_s=baseline_meas,
+        device=device.kind,
+        key=key,
+        candidates=len(candidates),
+    )
+    if cache:
+        _store(plan)
+    return plan
+
+
+def plan_assembly(
+    pattern: np.ndarray,
+    *,
+    factor_pattern: Optional[np.ndarray] = None,
+    block_sizes: Optional[Sequence[int]] = None,
+    measure: str = "auto",
+    top_k: int = 8,
+    device: Optional[DeviceModel] = None,
+    cache: bool = True,
+) -> Plan:
+    """Plan the SC assembly for one B-transpose sparsity ``pattern``.
+
+    Args:
+      pattern: (n, m) boolean-ish sparsity pattern of B-transpose in factor
+        row order / original column order (what :func:`build_stepped_meta`
+        takes).
+      factor_pattern: optional (n, n) sparsity pattern of the (permuted)
+        stiffness matrix; enables scoring of the pruning toggle via the
+        symbolic block fill mask at each candidate block size.
+      block_sizes / measure / top_k / device / cache: see
+        :func:`plan_from_builder`.
+    """
+    pattern = np.asarray(pattern) != 0
+    n, m = pattern.shape
+
+    def builder(bs: int, rbs: int):
+        meta = build_stepped_meta(pattern, block_size=bs, rhs_block_size=rbs)
+        mask = None
+        if factor_pattern is not None:
+            from repro.sparse import block_pattern, block_symbolic_cholesky
+
+            mask = block_symbolic_cholesky(
+                block_pattern(factor_pattern, bs))
+        return meta, mask
+
+    from repro.core.stepped import column_pivots
+
+    extra = []
+    if factor_pattern is not None:
+        # cheap factor-structure summary: per-row nonzero counts
+        extra.append(np.asarray(factor_pattern != 0).sum(axis=1)
+                     .astype(np.int64))
+    fp = pattern_fingerprint(column_pivots(pattern), n, m, extra=extra)
+    return plan_from_builder(
+        builder, fp, block_sizes=block_sizes, n_hint=n, measure=measure,
+        top_k=top_k, device=device, cache=cache)

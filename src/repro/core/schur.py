@@ -16,6 +16,8 @@ gluing matrix ``B̃ᵀ``, wisely utilizing the sparsity of both:
 
 The selectable ``SchurAssemblyConfig`` reproduces every row of the paper's
 Table 1 / Figure 6 design space, plus the dense baseline of [9] (§3.1).
+The paper picks the row by hand; :mod:`repro.core.autotune` picks it
+automatically (pass ``cfg="auto"`` to the FETI preprocessing/solver).
 """
 from __future__ import annotations
 
@@ -77,6 +79,12 @@ class SchurAssemblyConfig:
     def rhs_bs(self) -> int:
         return self.rhs_block_size or self.block_size
 
+    @property
+    def is_dense_baseline(self) -> bool:
+        """True when no variant exploits the stepped order — the column
+        permutation is then a mathematical no-op and is skipped."""
+        return self.trsm_variant == "dense" and self.syrk_variant == "dense"
+
 
 def _trsm(L, Bp, meta, cfg, block_mask):
     if cfg.use_pallas and cfg.trsm_variant != "dense":
@@ -116,6 +124,17 @@ def make_assembler(
     The permutation in/out is part of the compiled program (paper §4.4
     includes it in the measured assembly, so do we).
     """
+    if cfg.is_dense_baseline:
+        # dense TRSM + dense SYRK never look at the stepped metadata, so
+        # the in/out permutation would be pure overhead: F = (L⁻¹Bᵀ)ᵀL⁻¹Bᵀ
+        # is permutation-equivariant. This makes the dense/dense candidate
+        # of the autotuner cost-identical to schur_dense_baseline.
+        def assemble_dense(L: jax.Array, Bt: jax.Array) -> jax.Array:
+            Y = _trsm(L, Bt, meta, cfg, block_mask)
+            return _syrk(Y, meta, cfg)
+
+        return assemble_dense
+
     perm = jnp.asarray(meta.perm)
     inv = jnp.asarray(meta.inv_perm)
 

@@ -11,7 +11,7 @@ sharding that axis over the mesh is the multi-node story (launch/).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +23,7 @@ from repro.core import (
     make_assembler,
     shared_envelope,
 )
+from repro.core.autotune import Plan, pattern_fingerprint, plan_from_builder
 from repro.core.stepped import SteppedMeta
 from repro.fem.decomposition import FetiProblem
 from repro.fem.meshgen import structured_mesh
@@ -45,6 +46,7 @@ class ClusterState:
 
     problem: FetiProblem
     cfg: SchurAssemblyConfig
+    plan: Optional[Plan]  # autotuner plan when cfg was "auto", else None
     env: SteppedMeta  # shared stepped envelope (identity column perm)
     block_mask: np.ndarray  # factor block fill mask (shared)
     node_perm: np.ndarray  # fill-reducing node permutation (shared)
@@ -104,16 +106,26 @@ def batched_assemble(
 
 def make_cluster_preprocessor(
     problem: FetiProblem,
-    cfg: SchurAssemblyConfig,
+    cfg: Union[SchurAssemblyConfig, str],
     explicit: bool = True,
     ordering: str = "nd",
+    measure: str = "auto",
+    plan_cache: bool = True,
 ):
     """Build the COMPILED preprocessing function for one decomposition.
 
     Returns (static, prep) where ``prep(Kp_stack, Btp_stack) -> (L, F)`` is
     jitted once per sparsity pattern — the paper's symbolic/numeric split:
     multi-step simulations recall ``prep`` with new values at zero
-    recompiles. ``static`` carries the host-side symbolic products.
+    recompiles. ``static`` carries the host-side symbolic products,
+    including the resolved ``cfg`` and (if autotuned) the ``plan``.
+
+    ``cfg`` may be the string ``"auto"``: the autotuner
+    (:mod:`repro.core.autotune`) then searches the full variant/block-size
+    space against the cluster's *envelope* metadata — the exact metadata
+    the batched assembler executes with — and the winning plan is cached
+    content-addressed on the sparsity pattern + device kind. ``measure``
+    and ``plan_cache`` are forwarded to :func:`plan_from_builder`.
     """
     subs = problem.subdomains
     S = len(subs)
@@ -133,22 +145,51 @@ def make_cluster_preprocessor(
 
     lmesh = structured_mesh(problem.elems_per_sub)
     kpat = matrix_pattern_from_elems(n, lmesh.elems)[node_perm][:, node_perm]
-    # regularization only touches the diagonal: pattern unchanged
-    block_mask = block_symbolic_cholesky(block_pattern(kpat, cfg.block_size))
+    patterns = [sd.Bt[node_perm] != 0 for sd in subs]
 
-    # ---- per-subdomain stepped metadata + envelope ----
-    metas = []
+    # builder used both by the autotuner (scoring candidate block sizes)
+    # and below to materialize the symbolic products for the final cfg;
+    # memoized so the winning size isn't analyzed twice
+    _built: dict = {}
+
+    def _symbolic(bs: int, rbs: int):
+        key = (bs, rbs)
+        if key not in _built:
+            # regularization only touches the diagonal: pattern unchanged
+            mask = block_symbolic_cholesky(block_pattern(kpat, bs))
+            metas = [
+                build_stepped_meta(p, block_size=bs, rhs_block_size=rbs)
+                for p in patterns
+            ]
+            _built[key] = (metas, shared_envelope(metas), mask)
+        return _built[key]
+
+    plan = None
+    if isinstance(cfg, str):
+        if cfg != "auto":
+            raise ValueError(f"cfg must be a SchurAssemblyConfig or 'auto', "
+                             f"got {cfg!r}")
+        from repro.core import column_pivots
+
+        piv = np.stack([column_pivots(p) for p in patterns])
+        fp = pattern_fingerprint(
+            piv, n, m_max,
+            extra=[kpat.sum(axis=1).astype(np.int64), node_perm])
+        plan = plan_from_builder(
+            lambda bs, rbs: _symbolic(bs, rbs)[1:],
+            fp, n_hint=n,
+            # without explicit assembly only the factorization block size
+            # matters — don't burn timed assembly micro-runs on it
+            measure=measure if explicit else "never",
+            cache=plan_cache)
+        cfg = plan.cfg
+
+    metas, env, block_mask = _symbolic(cfg.block_size, cfg.rhs_bs)
     col_perms = np.empty((S, m_max), dtype=np.int64)
     inv_col_perms = np.empty((S, m_max), dtype=np.int64)
-    for i, sd in enumerate(subs):
-        Btp_i = sd.Bt[node_perm]
-        me = build_stepped_meta(
-            Btp_i != 0, block_size=cfg.block_size, rhs_block_size=cfg.rhs_bs
-        )
-        metas.append(me)
+    for i, me in enumerate(metas):
         col_perms[i] = me.perm
         inv_col_perms[i] = me.inv_perm
-    env = shared_envelope(metas)
 
     cp = jnp.asarray(col_perms)
     icp = jnp.asarray(inv_col_perms)
@@ -163,23 +204,33 @@ def make_cluster_preprocessor(
         return L, F
 
     static = dict(node_perm=node_perm, block_mask=block_mask, env=env,
-                  col_perm=cp, inv_col_perm=icp)
+                  col_perm=cp, inv_col_perm=icp, cfg=cfg, plan=plan)
     return static, jax.jit(prep)
 
 
 def preprocess_cluster(
     problem: FetiProblem,
-    cfg: SchurAssemblyConfig,
+    cfg: Union[SchurAssemblyConfig, str],
     explicit: bool = True,
     ordering: str = "nd",
     dtype=jnp.float64,
+    measure: str = "auto",
+    plan_cache: bool = True,
 ) -> ClusterState:
     """Paper §2.2 'preprocessing': factorize every K_i and (if explicit)
-    assemble every F̃ᵢ with the sparsity-utilizing pipeline."""
+    assemble every F̃ᵢ with the sparsity-utilizing pipeline.
+
+    Pass ``cfg="auto"`` to let the autotuner pick the variant/block-size
+    plan (see :mod:`repro.core.autotune`); the chosen plan is available as
+    ``ClusterState.plan`` and the resolved config as ``ClusterState.cfg``.
+    """
     subs = problem.subdomains
     S = len(subs)
     n = subs[0].n
-    static, prep = make_cluster_preprocessor(problem, cfg, explicit, ordering)
+    static, prep = make_cluster_preprocessor(
+        problem, cfg, explicit, ordering, measure=measure,
+        plan_cache=plan_cache)
+    cfg = static["cfg"]  # resolved when "auto" was passed
     node_perm = static["node_perm"]
 
     Kreg = np.stack(
@@ -200,6 +251,7 @@ def preprocess_cluster(
     return ClusterState(
         problem=problem,
         cfg=cfg,
+        plan=static["plan"],
         env=static["env"],
         block_mask=static["block_mask"],
         node_perm=node_perm,

@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -56,20 +56,30 @@ class FetiSolver:
     def __init__(
         self,
         problem: FetiProblem,
-        cfg: Optional[SchurAssemblyConfig] = None,
+        cfg: Union[SchurAssemblyConfig, str, None] = None,
         mode: str = "explicit",
         preconditioner: str = "lumped",
         ordering: str = "nd",
         dtype=jnp.float64,
+        measure: str = "auto",
+        plan_cache: bool = True,
     ):
+        """``cfg`` may also be the string ``"auto"``: the assembly plan is
+        then chosen by the autotuner during :meth:`preprocess` (see
+        :mod:`repro.core.autotune`) and ``self.cfg``/``self.plan`` carry
+        the resolved config and its cost report afterwards. ``measure``
+        and ``plan_cache`` tune that search and are ignored otherwise."""
         if mode not in ("explicit", "implicit"):
             raise ValueError("mode must be 'explicit' or 'implicit'")
         self.problem = problem
-        self.cfg = cfg or SchurAssemblyConfig()
+        self.cfg = cfg if cfg is not None else SchurAssemblyConfig()
+        self.plan = None
         self.mode = mode
         self.preconditioner = preconditioner
         self.ordering = ordering
         self.dtype = dtype
+        self.measure = measure
+        self.plan_cache = plan_cache
         self.state: Optional[ClusterState] = None
         self.timings: dict = {}
 
@@ -82,10 +92,14 @@ class FetiSolver:
             explicit=(self.mode == "explicit"),
             ordering=self.ordering,
             dtype=self.dtype,
+            measure=self.measure,
+            plan_cache=self.plan_cache,
         )
         jax.block_until_ready(self.state.L)
         if self.state.F is not None:
             jax.block_until_ready(self.state.F)
+        self.cfg = self.state.cfg  # resolved when "auto" was passed
+        self.plan = self.state.plan
         self.timings["preprocess_s"] = time.perf_counter() - t0
         return self.state
 

@@ -51,7 +51,7 @@ def _syrk_kernel(meta_ref, yi_ref, yj_ref, out_ref, *, bs: int, nb: int, bm: int
             return acc + jnp.dot(yi.T, yj, preferred_element_type=acc_t)
 
         acc = jax.lax.fori_loop(
-            start, nb, body, jnp.zeros((bm, bm), acc_t), unroll=False
+            start, nb, body, jnp.zeros((bm, bm), acc_t)
         )
         out_ref[...] = acc.astype(out_ref.dtype)
 

@@ -54,12 +54,12 @@ def _trsm_kernel(meta_ref, linv_ref, l_ref, b_ref, out_ref, *, bs: int, nb: int)
             yj = out_ref[pl.ds(j * bs, bs), :]
             return acc - jnp.dot(lkj, yj, preferred_element_type=acc_t)
 
-        acc = jax.lax.fori_loop(start, k, inner, acc, unroll=False)
+        acc = jax.lax.fori_loop(start, k, inner, acc)
         yk = jnp.dot(linv_ref[k], acc, preferred_element_type=acc_t)
         out_ref[rk, :] = yk.astype(out_ref.dtype)
         return 0
 
-    jax.lax.fori_loop(start, nb, outer, 0, unroll=False)
+    jax.lax.fori_loop(start, nb, outer, 0)
 
 
 @functools.partial(jax.jit, static_argnames=("bs", "bm", "interpret"))

@@ -20,7 +20,8 @@ import re
 from typing import Optional
 
 __all__ = ["HW", "CollectiveStats", "parse_collective_bytes",
-           "roofline_terms", "Roofline"]
+           "roofline_terms", "Roofline", "DeviceModel", "DEVICE_MODELS",
+           "detect_device"]
 
 # TPU v5e hardware constants (per chip)
 HW = {
@@ -30,6 +31,60 @@ HW = {
     "dci_bw": 25e9,  # B/s cross-pod (approx; 'pod'-axis collectives)
     "hbm_bytes": 16 * 2**30,  # capacity, for fit checks
 }
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    """Per-device roofline constants for *ranking* kernel schedules.
+
+    The autotuner (repro.core.autotune) feeds FLOP/byte models through
+    :meth:`time_s` to order candidate assembly plans; absolute accuracy is
+    irrelevant as long as relative costs rank correctly — measured refinement
+    handles the rest. ``peak_flops``/``mem_bw`` are for the f64 regime the
+    FETI substrate runs in (NOT the bf16 LM numbers in ``HW``).
+
+    Attributes:
+      kind: jax platform string ("tpu" | "gpu" | "cpu").
+      peak_flops: sustained f64 FLOP/s.
+      mem_bw: main-memory bandwidth, B/s.
+      overhead_s: per-dispatched-op launch/dispatch overhead. This is the
+        term that penalizes tiny block sizes (many small ops) and rewards
+        fused/pallas single-launch schedules.
+    """
+
+    kind: str
+    name: str
+    peak_flops: float
+    mem_bw: float
+    overhead_s: float = 5e-6
+
+    def time_s(self, flops: float, bytes_: float, n_ops: int = 1) -> float:
+        """Roofline execution-time estimate: max(compute, memory) + launches."""
+        return max(flops / self.peak_flops, bytes_ / self.mem_bw) \
+            + n_ops * self.overhead_s
+
+
+DEVICE_MODELS = {
+    # v5e f64 is emulated through f32 passes; rough sustained figure.
+    "tpu": DeviceModel("tpu", "tpu-v5e-f64", peak_flops=1.0e12,
+                       mem_bw=HW["hbm_bw"], overhead_s=2e-6),
+    # A100-class card (the paper's hardware), f64 non-tensor-core peak.
+    "gpu": DeviceModel("gpu", "a100-f64", peak_flops=9.7e12,
+                       mem_bw=1.55e12, overhead_s=5e-6),
+    # container-grade CPU; XLA:CPU per-op dispatch is comparatively heavy.
+    "cpu": DeviceModel("cpu", "host-f64", peak_flops=5.0e10,
+                       mem_bw=2.0e10, overhead_s=10e-6),
+}
+
+
+def detect_device(kind: Optional[str] = None) -> DeviceModel:
+    """Resolve a :class:`DeviceModel` from an explicit kind or jax's default
+    backend platform; unknown platforms fall back to the CPU model."""
+    if kind is None:
+        import jax  # local: roofline stays importable without a backend
+
+        kind = jax.devices()[0].platform
+    return DEVICE_MODELS.get(kind, DEVICE_MODELS["cpu"])
 
 _DTYPE_BYTES = {
     "f64": 8, "s64": 8, "u64": 8, "c64": 8,

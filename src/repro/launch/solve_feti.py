@@ -5,6 +5,11 @@ Runs preprocess (factorization + sparsity-utilizing SC assembly) and the
 PCPG solve for a registered FETI architecture, reports stage timings,
 iteration counts and the amortization point, and validates against the
 undecomposed global solve.
+
+``--autotune`` replaces the architecture's hand-picked assembly config with
+the planner of :mod:`repro.core.autotune` (the paper's Table-1 choice made
+automatically), prints the selected plan with predicted-vs-measured cost,
+and cross-checks the autotuned SCs against the dense baseline of [9].
 """
 from __future__ import annotations
 
@@ -32,6 +37,10 @@ def main(argv=None) -> int:
     p.add_argument("--tol", type=float, default=1e-9)
     p.add_argument("--validate", action="store_true",
                    help="compare against the global sparse solve")
+    p.add_argument("--autotune", action="store_true",
+                   help="let the plan autotuner pick the assembly config")
+    p.add_argument("--no-plan-cache", action="store_true",
+                   help="ignore + don't write the on-disk plan cache")
     args = p.parse_args(argv)
 
     fc = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -42,12 +51,33 @@ def main(argv=None) -> int:
     print(f"[feti] {fc.name}: {prob.n_subdomains} subdomains x "
           f"{prob.subdomains[0].n} DOFs, {prob.n_lambda} multipliers")
 
-    cfg = SchurAssemblyConfig(
-        trsm_variant=fc.trsm_variant, syrk_variant=fc.syrk_variant,
-        block_size=fc.block_size, rhs_block_size=fc.rhs_block_size,
-    )
-    solver = FetiSolver(prob, cfg, mode=args.mode)
+    if args.autotune:
+        cfg = "auto"
+    else:
+        cfg = SchurAssemblyConfig(
+            trsm_variant=fc.trsm_variant, syrk_variant=fc.syrk_variant,
+            block_size=fc.block_size, rhs_block_size=fc.rhs_block_size,
+        )
+    solver = FetiSolver(prob, cfg, mode=args.mode,
+                        plan_cache=not args.no_plan_cache)
     sol = solver.solve(tol=args.tol)
+
+    if args.autotune and solver.plan is not None:
+        for line in solver.plan.summary().splitlines():
+            print(f"[autotune] {line}")
+        if solver.state is not None and solver.state.F is not None:
+            import jax.numpy as jnp
+
+            from repro.core import schur_dense_baseline
+
+            st = solver.state
+            F_ref = jax.vmap(schur_dense_baseline)(st.L, st.Btp)
+            err = float(jnp.max(jnp.abs(st.F - F_ref)))
+            print(f"[autotune] max |F_auto - F_dense_baseline| = {err:.2e}")
+            if err > 1e-8:
+                print("[autotune] FAIL: autotuned assembly disagrees with "
+                      "the dense baseline")
+                return 1
     print(f"[feti] mode={args.mode} iters={sol.iterations} "
           f"residual={sol.residual:.2e} converged={sol.converged}")
     print(f"[feti] preprocess={sol.timings['preprocess_s']:.2f}s "

@@ -1,0 +1,98 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (optional test dep).
+
+The container image pins what it pins; when the real ``hypothesis`` package
+is absent this shim is installed into ``sys.modules`` by ``conftest.py`` so
+the property-test modules still *collect and run* instead of dying with
+``ModuleNotFoundError`` — each ``@given`` test becomes a seeded random
+sweep over the strategy space (fixed PRNG seed → reproducible examples).
+
+Only the tiny surface the test-suite uses is implemented:
+
+    from hypothesis import given, settings, strategies as st
+    st.integers(lo, hi) / st.floats(lo, hi) / st.sampled_from(seq)
+    @settings(max_examples=..., deadline=...)
+    @given(**strategies)
+
+Install the real package (``pip install .[test]``) to get shrinking and
+example databases; the fallback intentionally trades those for zero deps.
+"""
+from __future__ import annotations
+
+import types
+
+_FALLBACK_MAX_EXAMPLES = 20
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value, max_value) -> _Strategy:
+    return _Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value))
+    )
+
+
+def sampled_from(elements) -> _Strategy:
+    elems = list(elements)
+    return _Strategy(lambda rng: elems[int(rng.integers(0, len(elems)))])
+
+
+def settings(max_examples: int = _FALLBACK_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        def runner():
+            import numpy as np
+
+            rng = np.random.default_rng(_SEED)
+            # @settings is conventionally applied ABOVE @given, i.e. to the
+            # runner itself — check it first, the raw fn second
+            n_examples = getattr(
+                runner, "_fallback_max_examples",
+                getattr(fn, "_fallback_max_examples",
+                        _FALLBACK_MAX_EXAMPLES))
+            for _ in range(n_examples):
+                drawn = {k: s.example(rng) for k, s in strategies.items()}
+                fn(**drawn)
+
+        # NOT functools.wraps: pytest reads the wrapper's signature, and
+        # copying the original's would make it inject the strategy params
+        # as (nonexistent) fixtures. Zero-arg wrapper, names copied by hand.
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+
+    return deco
+
+
+def build_module() -> types.ModuleType:
+    """Assemble a module object mimicking the ``hypothesis`` package root."""
+    mod = types.ModuleType("hypothesis")
+    mod.__doc__ = __doc__
+    mod.given = given
+    mod.settings = settings
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.floats = floats
+    st_mod.sampled_from = sampled_from
+    mod.strategies = st_mod
+    mod.__fallback__ = True
+    return mod

@@ -1,10 +1,34 @@
 """Test-wide config.
 
-x64 is enabled for the numerical-linear-algebra substrate (FEM / Cholesky /
-FETI convergence checks need it). Model code passes explicit dtypes so the
-LM smoke tests are unaffected. Device count stays at 1 — only the dry-run
-launcher (a separate process) requests 512 placeholder devices.
+Two jobs:
+
+1. Guard optional dependencies so *collection never hard-errors*:
+   ``jax``/``numpy`` are hard requirements of every module under test, so
+   they are ``pytest.importorskip``'d here (one clean skip instead of 13
+   collection tracebacks).  ``hypothesis`` is optional — when it is missing
+   a deterministic fallback (tests/_hypothesis_fallback.py) is installed in
+   ``sys.modules`` so the property-test modules still run as seeded random
+   sweeps.
+
+2. x64 is enabled for the numerical-linear-algebra substrate (FEM /
+   Cholesky / FETI convergence checks need it). Model code passes explicit
+   dtypes so the LM smoke tests are unaffected. Device count stays at 1 —
+   only the dry-run launcher (a separate process) requests 512 placeholder
+   devices.
 """
-import jax
+import importlib.util
+import sys
+
+import pytest
+
+pytest.importorskip("numpy", reason="numpy is required for the test suite")
+jax = pytest.importorskip("jax", reason="jax is required for the test suite")
+
+if importlib.util.find_spec("hypothesis") is None:
+    import _hypothesis_fallback  # tests/ is on sys.path during collection
+
+    mod = _hypothesis_fallback.build_module()
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = mod.strategies
 
 jax.config.update("jax_enable_x64", True)
