@@ -33,8 +33,8 @@ def run(sizes_2d=(12, 16, 24, 32), sizes_3d=(5, 7, 9, 11), bs: int = 32,
 
             t_dense = time_fn(jax.jit(trsm_dense), L, Bp, reps=reps)
             t_opt = time_fn(
-                jax.jit(lambda l, b: trsm_factor_split(l, b, meta,
-                                                       block_mask=mask)),
+                jax.jit(lambda lo, b: trsm_factor_split(lo, b, meta,
+                                                        block_mask=mask)),
                 L, Bp, reps=reps,
             )
             fl_speed = meta.flops_trsm_dense() / max(

@@ -32,12 +32,12 @@ def run(sizes_2d=(16, 24), sizes_3d=(6, 9), bs: int = 32,
 
             trsm_variants = {
                 "trsm_dense": jax.jit(trsm_dense),
-                "trsm_rhs": jax.jit(lambda l, b: trsm_rhs_split(l, b, meta)),
+                "trsm_rhs": jax.jit(lambda lo, b: trsm_rhs_split(lo, b, meta)),
                 "trsm_factor": jax.jit(
-                    lambda l, b: trsm_factor_split(l, b, meta)
+                    lambda lo, b: trsm_factor_split(lo, b, meta)
                 ),
                 "trsm_factor_prune": jax.jit(
-                    lambda l, b: trsm_factor_split(l, b, meta, block_mask=mask)
+                    lambda lo, b: trsm_factor_split(lo, b, meta, block_mask=mask)
                 ),
             }
             flops = {

@@ -17,7 +17,7 @@ jax.config.update("jax_enable_x64", True)  # the FETI substrate benches are
 
 import numpy as np
 
-from repro.core import SchurAssemblyConfig, build_stepped_meta
+from repro.core import build_stepped_meta
 from repro.fem import (
     assemble_dense,
     p1_element_stiffness,
@@ -31,7 +31,6 @@ from repro.sparse import (
     nested_dissection_order,
 )
 from repro.sparse.cholesky import block_cholesky
-from repro.testing import random_feti_like_bt
 
 __all__ = ["time_fn", "subdomain_problem", "emit", "HEADER"]
 

@@ -9,6 +9,7 @@ Emits ``name,us_per_call,derived`` CSV rows. Mapping to the paper:
     bench_assembly    — Fig. 8 (whole SC assembly, sep/mix)
     bench_autotune    — Table 1 made automatic (autotuned vs hand vs dense)
     bench_feti        — Figs. 9 & 10 (FETI preprocessing + amortization)
+    bench_sharded     — distributed FETI scaling vs device count
     bench_lm          — assigned-architecture step smoke timings
 """
 from __future__ import annotations
@@ -26,6 +27,7 @@ MODULES = [
     "bench_assembly",
     "bench_autotune",
     "bench_feti",
+    "bench_sharded",
     "bench_lm",
 ]
 

@@ -9,7 +9,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.data import synthetic_batch
 from repro.models import ModelConfig, init_model

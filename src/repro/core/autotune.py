@@ -238,8 +238,14 @@ def enumerate_space(block_sizes: Sequence[int],
 # --------------------------------------------------------------------------
 
 def plan_cache_dir() -> str:
-    """Cache root: ``$REPRO_PLAN_CACHE`` or ``~/.cache/repro/plans``."""
-    root = os.environ.get("REPRO_PLAN_CACHE")
+    """Cache root: ``$REPRO_PLAN_CACHE_DIR`` (canonical; what CI sets for
+    hermetic per-job caches), falling back to the legacy
+    ``$REPRO_PLAN_CACHE`` spelling, then ``~/.cache/repro/plans``.
+
+    Read at every cache access — not captured at import — so tests and CI
+    can point the planner at a temp dir without reloading the module."""
+    root = os.environ.get("REPRO_PLAN_CACHE_DIR") \
+        or os.environ.get("REPRO_PLAN_CACHE")
     if not root:
         root = os.path.join(os.path.expanduser("~"), ".cache", "repro",
                             "plans")

@@ -2,7 +2,7 @@
 
 Assembles the dense local dual operator
 
-    F̃ = B̃ L⁻ᵀ L⁻¹ B̃ᵀ = (L⁻¹B̃ᵀ)ᵀ (L⁻¹B̃ᵀ) = Yᵀ Y          (paper eq. 14)
+    F̃ = B̃ L⁻ᵀ L⁻¹ B̃ᵀ = (L⁻¹B̃ᵀ)ᵀ (L⁻¹B̃ᵀ) = Yᵀ Y    (paper eq. 14)
 
 from the Cholesky factor ``L`` of the regularized subdomain matrix and the
 gluing matrix ``B̃ᵀ``, wisely utilizing the sparsity of both:
@@ -28,10 +28,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import stepped as stepped_mod
 from repro.core import syrk as syrk_mod
 from repro.core import trsm as trsm_mod
-from repro.core.stepped import SteppedMeta, build_stepped_meta
+from repro.core.stepped import SteppedMeta
 
 __all__ = [
     "SchurAssemblyConfig",

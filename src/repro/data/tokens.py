@@ -3,7 +3,6 @@ fixed-length LM batches. Per-host sharding keys off (host_id, num_hosts) so
 every host reads a disjoint stream — the multi-node data path."""
 from __future__ import annotations
 
-import os
 from typing import Iterator
 
 import numpy as np

@@ -68,7 +68,6 @@ def _matrix_spec(mesh: Mesh, shape, tp_dim: int, fsdp_dim: int,
 def _spec_for_param(mesh: Mesh, path: str, x) -> P:
     shape = x.shape
     nd = len(shape)
-    lead = nd - 2  # stacked scan axes (body params carry a cycle dim)
 
     def mat(tp_last: bool) -> P:
         axes = [None] * nd

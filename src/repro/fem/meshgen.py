@@ -80,7 +80,10 @@ def structured_mesh(
             np.arange(nx), np.arange(ny), np.arange(nz), indexing="ij"
         )
         ix, iy, iz = ix.ravel(), iy.ravel(), iz.ravel()
-        corner = lambda dx, dy, dz: _node_id(shape, ix + dx, iy + dy, iz + dz)
+
+        def corner(dx, dy, dz):
+            return _node_id(shape, ix + dx, iy + dy, iz + dz)
+
         # Kuhn / staircase decomposition: for each of the 6 axis orders,
         # tet = [c000, c000+e_a, c000+e_a+e_b, c111].
         import itertools

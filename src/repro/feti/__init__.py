@@ -1,7 +1,11 @@
 """FETI solver substrate (paper §2): batched per-cluster preprocessing
 (factorization + sparsity-utilizing SC assembly), the dual operator in both
 implicit and explicit form, the natural-coarse-space projector, PCPG, and
-the end-to-end solver with amortization accounting (paper §5)."""
+the end-to-end solver with amortization accounting (paper §5).
+
+:mod:`repro.feti.sharded` distributes the whole pipeline by sharding the
+subdomain axis over a ``("data",)`` device mesh; pass ``mesh=`` to
+:class:`FetiSolver` / :func:`preprocess_cluster` to use it."""
 from repro.feti.assembly import ClusterState, preprocess_cluster
 from repro.feti.operator import (
     dual_rhs,
@@ -21,6 +25,7 @@ __all__ = [
     "PCPGResult",
     "build_coarse_problem",
     "dual_rhs",
+    "preprocess_cluster",
     "explicit_dual_apply",
     "implicit_dual_apply",
     "lumped_preconditioner",

@@ -5,13 +5,21 @@ All subdomains of the structured decomposition share one local topology, so
 they share the fill-reducing permutation, the symbolic block fill mask and
 the (envelope) stepped metadata — the whole cluster preprocesses in ONE
 compiled XLA program with a leading subdomain axis. This replaces the
-paper's 16-CUDA-streams subdomain loop with the TPU-idiomatic batched form;
-sharding that axis over the mesh is the multi-node story (launch/).
+paper's 16-CUDA-streams subdomain loop with the TPU-idiomatic batched form.
+
+Pass ``mesh`` (a ``("data",)`` mesh, see :func:`repro.launch.mesh.
+make_feti_mesh`) to shard that subdomain axis over devices — the
+multi-node story. Preprocessing then relabels local multipliers into each
+subdomain's stepped column order host-side (the ``col_perm=None``
+assembler path), pads the cluster to a multiple of the mesh size, and
+factorizes + assembles under ``shard_map`` so every device owns its slice
+of subdomains end-to-end; :mod:`repro.feti.sharded` documents the scheme.
+``mesh=None`` keeps the single-device behavior bit-for-bit.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Union
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +35,8 @@ from repro.core.autotune import Plan, pattern_fingerprint, plan_from_builder
 from repro.core.stepped import SteppedMeta
 from repro.fem.decomposition import FetiProblem
 from repro.fem.meshgen import structured_mesh
-from repro.fem.regularization import fixing_node_regularization, kernel_basis
+from repro.fem.regularization import fixing_node_regularization
+from repro.feti import sharded as shlib
 from repro.sparse import (
     block_pattern,
     block_symbolic_cholesky,
@@ -42,7 +51,14 @@ __all__ = ["ClusterState", "preprocess_cluster", "batched_assemble"]
 
 @dataclasses.dataclass
 class ClusterState:
-    """Everything the solution phase needs, stacked over subdomains."""
+    """Everything the solution phase needs, stacked over subdomains.
+
+    When ``mesh`` is set, the subdomain-stacked device arrays are padded to
+    a multiple of the mesh size, sharded over its ``data`` axis, and hold
+    *relabeled* multiplier columns (each subdomain's stepped order — see
+    :mod:`repro.feti.sharded`); ``lambda_ids`` is relabeled consistently so
+    λ-space semantics are unchanged.
+    """
 
     problem: FetiProblem
     cfg: SchurAssemblyConfig
@@ -59,9 +75,15 @@ class ClusterState:
     f: jax.Array  # (S, n) loads (original node order)
     fp: jax.Array  # (S, n) loads (factor order)
     lambda_ids: jax.Array  # (S, m_max) global multiplier ids (pad=n_lambda)
-    col_perm: jax.Array  # (S, m_max) stepped column permutation per subdomain
-    inv_col_perm: jax.Array  # (S, m_max)
+    col_perm: jax.Array  # (S_real, m_max) stepped column perm per subdomain
+    inv_col_perm: jax.Array  # (S_real, m_max)
     r_norm: jax.Array  # (S,) 1/sqrt(n): the normalized constant kernel entry
+    mesh: Optional[jax.sharding.Mesh] = None  # set => stacks sharded over it
+    n_real: Optional[int] = None  # subdomain count before mesh padding
+    relabeled: bool = False  # multiplier columns in stepped (relabeled) order
+    # the compiled (Kp_stack, Btp_stack) -> (L, F) preprocessor, for the
+    # multi-step regime: new values, same pattern, zero recompiles
+    prep: Optional[Callable] = None
 
     @property
     def n_lambda(self) -> int:
@@ -69,7 +91,13 @@ class ClusterState:
 
     @property
     def S(self) -> int:
+        """Stacked subdomain count (including any mesh padding)."""
         return self.L.shape[0]
+
+    @property
+    def S_real(self) -> int:
+        """Actual subdomain count (excluding mesh padding)."""
+        return self.n_real if self.n_real is not None else self.S
 
 
 def batched_assemble(
@@ -111,6 +139,7 @@ def make_cluster_preprocessor(
     ordering: str = "nd",
     measure: str = "auto",
     plan_cache: bool = True,
+    mesh=None,
 ):
     """Build the COMPILED preprocessing function for one decomposition.
 
@@ -126,6 +155,12 @@ def make_cluster_preprocessor(
     the batched assembler executes with — and the winning plan is cached
     content-addressed on the sparsity pattern + device kind. ``measure``
     and ``plan_cache`` are forwarded to :func:`plan_from_builder`.
+
+    With ``mesh`` set, ``prep`` expects subdomain-sharded stacks whose
+    multiplier columns are already relabeled into each subdomain's stepped
+    order (:func:`repro.feti.sharded.relabel_columns`) and runs
+    factorization + the ``col_perm=None`` assembler under ``shard_map`` —
+    every device processes exactly its slice of subdomains, no exchange.
     """
     subs = problem.subdomains
     S = len(subs)
@@ -167,7 +202,7 @@ def make_cluster_preprocessor(
     plan = None
     if isinstance(cfg, str):
         if cfg != "auto":
-            raise ValueError(f"cfg must be a SchurAssemblyConfig or 'auto', "
+            raise ValueError("cfg must be a SchurAssemblyConfig or 'auto', "
                              f"got {cfg!r}")
         from repro.core import column_pivots
 
@@ -194,14 +229,40 @@ def make_cluster_preprocessor(
     cp = jnp.asarray(col_perms)
     icp = jnp.asarray(inv_col_perms)
 
-    def prep(Kp_stack, Btp_stack):
-        L = jax.vmap(
-            lambda A: block_cholesky(A, cfg.block_size, mask=block_mask)
-        )(Kp_stack)
-        if not explicit:
-            return L, None
-        F = batched_assemble(L, Btp_stack, cp, icp, env, cfg, block_mask)
-        return L, F
+    if mesh is None:
+
+        def prep(Kp_stack, Btp_stack):
+            L = jax.vmap(
+                lambda A: block_cholesky(A, cfg.block_size, mask=block_mask)
+            )(Kp_stack)
+            if not explicit:
+                return L, None
+            F = batched_assemble(L, Btp_stack, cp, icp, env, cfg, block_mask)
+            return L, F
+
+    else:
+        from jax.sharding import PartitionSpec as P
+
+        def _local(Kp_l, Btp_l):
+            L_l = jax.vmap(
+                lambda A: block_cholesky(A, cfg.block_size, mask=block_mask)
+            )(Kp_l)
+            if not explicit:
+                return (L_l,)
+            # columns were relabeled host-side: the col_perm=None fast path
+            F_l = batched_assemble(L_l, Btp_l, None, None, env, cfg,
+                                   block_mask)
+            return (L_l, F_l)
+
+        n_out = 2 if explicit else 1
+
+        def prep(Kp_stack, Btp_stack):
+            outs = shlib.shard_map(
+                _local, mesh=mesh,
+                in_specs=(P(shlib.AXIS), P(shlib.AXIS)),
+                out_specs=(P(shlib.AXIS),) * n_out,
+            )(Kp_stack, Btp_stack)
+            return outs if explicit else (outs[0], None)
 
     static = dict(node_perm=node_perm, block_mask=block_mask, env=env,
                   col_perm=cp, inv_col_perm=icp, cfg=cfg, plan=plan)
@@ -216,6 +277,7 @@ def preprocess_cluster(
     dtype=jnp.float64,
     measure: str = "auto",
     plan_cache: bool = True,
+    mesh=None,
 ) -> ClusterState:
     """Paper §2.2 'preprocessing': factorize every K_i and (if explicit)
     assemble every F̃ᵢ with the sparsity-utilizing pipeline.
@@ -223,13 +285,19 @@ def preprocess_cluster(
     Pass ``cfg="auto"`` to let the autotuner pick the variant/block-size
     plan (see :mod:`repro.core.autotune`); the chosen plan is available as
     ``ClusterState.plan`` and the resolved config as ``ClusterState.cfg``.
+
+    Pass ``mesh`` (``("data",)`` axis, :func:`repro.launch.mesh.
+    make_feti_mesh`) to shard the subdomain axis over devices: multipliers
+    are relabeled to stepped column order host-side, the cluster is padded
+    to a multiple of the mesh size with inert identity subdomains, and all
+    stacks land sharded. ``mesh=None`` is bit-for-bit today's behavior.
     """
     subs = problem.subdomains
     S = len(subs)
     n = subs[0].n
     static, prep = make_cluster_preprocessor(
         problem, cfg, explicit, ordering, measure=measure,
-        plan_cache=plan_cache)
+        plan_cache=plan_cache, mesh=mesh)
     cfg = static["cfg"]  # resolved when "auto" was passed
     node_perm = static["node_perm"]
 
@@ -242,12 +310,39 @@ def preprocess_cluster(
     f = np.stack([sd.f for sd in subs])
     lam = np.stack([sd.lambda_ids for sd in subs])
 
-    Kp_j = jnp.asarray(Kp, dtype=dtype)
-    Btp_j = jnp.asarray(Btp, dtype=dtype)
+    if mesh is None:
+        S_pad = S
+
+        def to_dev(x, dt=dtype):
+            return jnp.asarray(x, dtype=dt)
+
+    else:
+        # relabel multiplier columns into each subdomain's stepped order
+        # (arbitrary by construction) so the assembler and dual operator
+        # run permute-free, then pad to a mesh-size multiple with inert
+        # identity subdomains glued to nothing (ids -> the dummy slot)
+        cp_np = np.asarray(static["col_perm"])
+        Btp = shlib.relabel_columns(Btp, cp_np)
+        lam = shlib.relabel_columns(lam, cp_np)
+        S_pad = shlib.padded_count(S, mesh)
+        Kp = shlib.pad_stack(Kp, S_pad, identity=True)
+        Btp = shlib.pad_stack(Btp, S_pad)
+        K_orig = shlib.pad_stack(K_orig, S_pad)
+        f = shlib.pad_stack(f, S_pad)
+        pad_ids = np.full((S_pad - S, lam.shape[1]), problem.n_lambda,
+                          lam.dtype)
+        lam = np.concatenate([lam, pad_ids], axis=0)
+
+        def to_dev(x, dt=dtype):
+            return shlib.shard_stack(mesh, np.asarray(x, dtype=dt))
+
+    Kp_j = to_dev(Kp)
+    Btp_j = to_dev(Btp)
     L, F = prep(Kp_j, Btp_j)
 
-    r_norm = jnp.full((S,), 1.0 / np.sqrt(n), dtype=dtype)
-    f_j = jnp.asarray(f, dtype=dtype)
+    r_norm = to_dev(np.full((S_pad,), 1.0 / np.sqrt(n)))
+    f_j = to_dev(f)
+    fp_j = to_dev(f[:, node_perm])
     return ClusterState(
         problem=problem,
         cfg=cfg,
@@ -257,12 +352,16 @@ def preprocess_cluster(
         node_perm=node_perm,
         L=L,
         Btp=Btp_j,
-        K=jnp.asarray(K_orig, dtype=dtype),
+        K=to_dev(K_orig),
         F=F,
         f=f_j,
-        fp=f_j[:, node_perm],
-        lambda_ids=jnp.asarray(lam),
+        fp=fp_j,
+        lambda_ids=to_dev(lam, dt=None),
         col_perm=static["col_perm"],
         inv_col_perm=static["inv_col_perm"],
         r_norm=r_norm,
+        mesh=mesh,
+        n_real=S if mesh is not None else None,
+        relabeled=mesh is not None,
+        prep=prep,
     )

@@ -5,8 +5,10 @@ Explicit application (paper eq. 12): one dense GEMV per subdomain against
 the preassembled SC — the thing the whole paper exists to make cheap.
 
 The gather (λ → local) / scatter-add (local → λ) pair is the algebraic form
-of the paper's MPI neighbour exchange; under shard_map the scatter becomes a
-psum over the subdomain-sharded axis (see launch/).
+of the paper's MPI neighbour exchange. These batched implementations are
+also the per-shard bodies of the distributed deployment: under shard_map
+the scatter lands in a device-local partial and becomes a psum over the
+subdomain-sharded axis (see :mod:`repro.feti.sharded`).
 """
 from __future__ import annotations
 
@@ -51,7 +53,7 @@ def _tri_solve(L, b, transpose):
 
 def implicit_dual_apply(L: jax.Array, Btp: jax.Array, lambda_ids: jax.Array,
                         n_lambda: int, lam: jax.Array) -> jax.Array:
-    """q = Σᵢ scatter( B̃ᵢ L⁻ᵀ L⁻¹ B̃ᵢᵀ gather(λ) )   (paper eq. 11)."""
+    """q = Σᵢ scatter( B̃ᵢ L⁻ᵀL⁻¹ B̃ᵢᵀ gather(λ) )  (paper eq. 11)."""
     p_loc = gather_local(lam, lambda_ids)
     v = jnp.einsum("snm,sm->sn", Btp, p_loc)
     t = jax.vmap(_tri_solve, in_axes=(0, 0, None))(L, v, False)

@@ -25,6 +25,10 @@ class PCPGResult:
     converged: jax.Array  # bool scalar
 
 
+def _identity(x: jax.Array) -> jax.Array:
+    return x
+
+
 def pcpg(
     apply_F: Callable[[jax.Array], jax.Array],
     project: Callable[[jax.Array], jax.Array],
@@ -33,14 +37,30 @@ def pcpg(
     precondition: Optional[Callable[[jax.Array], jax.Array]] = None,
     tol: float = 1e-9,
     max_iter: int = 500,
+    mesh=None,
 ) -> PCPGResult:
     """Solve P F λ = P d on the affine space λ⁰ + Ker(Gᵀ).
 
     Iterates:  w = P r;  z = P M⁻¹ w;  standard CG update with (z·w) inner
     products. Without a preconditioner z = w (M = I).
+
+    ``mesh`` (optional, the subdomain-sharded deployment of
+    :mod:`repro.feti.sharded`) pins the CG carries to replicated layout so
+    GSPMD never round-trips the dual vectors through a sharded
+    representation between the shard_map'd operator applications; with
+    ``mesh=None`` the loop is exactly the single-device program.
     """
     if precondition is None:
-        precondition = lambda x: x
+        precondition = _identity
+    if mesh is None:
+        constrain = _identity
+    else:
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        replicated = NamedSharding(mesh, PartitionSpec())
+
+        def constrain(x):
+            return jax.lax.with_sharding_constraint(x, replicated)
 
     r0 = d - apply_F(lam0)
     w0 = project(r0)
@@ -57,13 +77,13 @@ def pcpg(
         lam, r, p, zeta, _, k = carry
         Fp = apply_F(p)
         gamma = zeta / jnp.vdot(p, Fp)
-        lam = lam + gamma * p
-        r = r - gamma * Fp
+        lam = constrain(lam + gamma * p)
+        r = constrain(r - gamma * Fp)
         w = project(r)
         z = project(precondition(w))
         zeta_new = jnp.vdot(z, w)
         beta = zeta_new / zeta
-        p = z + beta * p
+        p = constrain(z + beta * p)
         return lam, r, p, zeta_new, jnp.linalg.norm(w), k + 1
 
     init = (lam0, r0, z0, zeta0, norm_w0, jnp.asarray(0, jnp.int32))

@@ -7,7 +7,25 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-__all__ = ["CoarseProblem", "build_coarse_problem"]
+__all__ = ["CoarseProblem", "build_coarse_problem", "coarse_g_e"]
+
+
+def coarse_g_e(Bt: jax.Array, f: jax.Array, r_norm: jax.Array,
+               lambda_ids: jax.Array, n_lambda: int):
+    """G = BR columns and e = Rᵀf for a stack of subdomains.
+
+    R is the normalized constant kernel (one column per subdomain), so
+    column i of G is scatter(lambda_ids_i, B̃ᵢ r_i) with r_i = r_norm·1.
+    The shared body of the single-device construction below and of the
+    per-shard body in :mod:`repro.feti.sharded` (where ``Bt`` is that
+    device's slice of subdomains)."""
+    S = Bt.shape[0]
+    vals = jnp.einsum("snm,s->sm", Bt, r_norm)  # (S, m_max)
+    s_idx = jnp.broadcast_to(jnp.arange(S)[:, None], lambda_ids.shape)
+    G = jnp.zeros((n_lambda + 1, S), Bt.dtype)
+    G = G.at[lambda_ids, s_idx].add(vals)[:-1]
+    e = jnp.sum(f, axis=1) * r_norm
+    return G, e
 
 
 @dataclasses.dataclass
@@ -43,14 +61,9 @@ def build_coarse_problem(Bt: jax.Array, f: jax.Array, r_norm: jax.Array,
     ``Bt`` may be in any consistent row (node) order — R is constant so the
     permutation drops out of Bᵀr; we pass the original-order B̃ᵀ.
     """
-    S, n, m_max = Bt.shape
-    # column i of G: scatter(lambda_ids_i, B̃ᵢ r_i); r_i = r_norm * ones
-    vals = jnp.einsum("snm,s->sm", Bt, r_norm)  # (S, m_max)
-    G = jnp.zeros((n_lambda + 1, S), Bt.dtype)
-    s_idx = jnp.broadcast_to(jnp.arange(S)[:, None], lambda_ids.shape)
-    G = G.at[lambda_ids, s_idx].add(vals)[:-1]
+    S = Bt.shape[0]
+    G, e = coarse_g_e(Bt, f, r_norm, lambda_ids, n_lambda)
     GtG = G.T @ G
     # tiny jitter for the (rare) case of exactly-singular coarse problems
     GtG = GtG + 1e-12 * jnp.trace(GtG) / S * jnp.eye(S, dtype=Bt.dtype)
-    e = jnp.sum(f, axis=1) * r_norm
     return CoarseProblem(G=G, GtG_chol=jnp.linalg.cholesky(GtG), e=e)

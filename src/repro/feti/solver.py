@@ -63,12 +63,20 @@ class FetiSolver:
         dtype=jnp.float64,
         measure: str = "auto",
         plan_cache: bool = True,
+        mesh=None,
     ):
         """``cfg`` may also be the string ``"auto"``: the assembly plan is
         then chosen by the autotuner during :meth:`preprocess` (see
         :mod:`repro.core.autotune`) and ``self.cfg``/``self.plan`` carry
         the resolved config and its cost report afterwards. ``measure``
-        and ``plan_cache`` tune that search and are ignored otherwise."""
+        and ``plan_cache`` tune that search and are ignored otherwise.
+
+        ``mesh`` (a ``("data",)`` device mesh, see
+        :func:`repro.launch.mesh.make_feti_mesh`) shards the subdomain
+        axis over devices: preprocessing partitions per-device and the
+        PCPG operators run under shard_map with psum exchange
+        (:mod:`repro.feti.sharded`). ``mesh=None`` keeps today's
+        single-device batched behavior bit-for-bit."""
         if mode not in ("explicit", "implicit"):
             raise ValueError("mode must be 'explicit' or 'implicit'")
         self.problem = problem
@@ -80,6 +88,7 @@ class FetiSolver:
         self.dtype = dtype
         self.measure = measure
         self.plan_cache = plan_cache
+        self.mesh = mesh
         self.state: Optional[ClusterState] = None
         self.timings: dict = {}
 
@@ -94,6 +103,7 @@ class FetiSolver:
             dtype=self.dtype,
             measure=self.measure,
             plan_cache=self.plan_cache,
+            mesh=self.mesh,
         )
         jax.block_until_ready(self.state.L)
         if self.state.F is not None:
@@ -111,27 +121,53 @@ class FetiSolver:
         prob = self.problem
         nl = prob.n_lambda
         c = jnp.asarray(prob.c, dtype=self.dtype)
-        Bt_orig = jnp.asarray(
-            np.stack([sd.Bt for sd in prob.subdomains]), dtype=self.dtype
-        )
+        Bt_host = np.stack([sd.Bt for sd in prob.subdomains])
 
-        coarse = build_coarse_problem(
-            Bt_orig, st.f, st.r_norm, st.lambda_ids, nl
-        )
-
-        if self.mode == "explicit":
-            apply_F = partial(explicit_dual_apply, st.F, st.lambda_ids, nl)
+        if st.mesh is None:
+            Bt_orig = jnp.asarray(Bt_host, dtype=self.dtype)
+            coarse = build_coarse_problem(
+                Bt_orig, st.f, st.r_norm, st.lambda_ids, nl
+            )
+            if self.mode == "explicit":
+                apply_F = partial(explicit_dual_apply, st.F, st.lambda_ids,
+                                  nl)
+            else:
+                apply_F = partial(implicit_dual_apply, st.L, st.Btp,
+                                  st.lambda_ids, nl)
+            precond_args = (st.K, Bt_orig, st.lambda_ids, nl)
+            precond_fn = lumped_preconditioner
+            d = dual_rhs(st.L, st.Btp, st.fp, st.lambda_ids, nl, c)
         else:
-            apply_F = partial(implicit_dual_apply, st.L, st.Btp, st.lambda_ids, nl)
+            from repro.feti import sharded as shlib
+
+            # match the state's relabeled multiplier columns, pad the
+            # dummy subdomains (zero gluing), and shard like the stacks
+            Bt_rel = shlib.relabel_columns(Bt_host, np.asarray(st.col_perm))
+            Bt_orig = shlib.shard_stack(
+                st.mesh, np.asarray(shlib.pad_stack(Bt_rel, st.S),
+                                    dtype=self.dtype))
+            coarse = shlib.build_coarse_problem(
+                st.mesh, Bt_orig, st.f, st.r_norm, st.lambda_ids, nl,
+                S_real=st.S_real,
+            )
+            if self.mode == "explicit":
+                apply_F = partial(shlib.explicit_dual_apply, st.mesh, st.F,
+                                  st.lambda_ids, nl)
+            else:
+                apply_F = partial(shlib.implicit_dual_apply, st.mesh, st.L,
+                                  st.Btp, st.lambda_ids, nl)
+            precond_args = (st.mesh, st.K, Bt_orig, st.lambda_ids, nl)
+            precond_fn = shlib.lumped_preconditioner
+            d = shlib.dual_rhs(st.mesh, st.L, st.Btp, st.fp, st.lambda_ids,
+                               nl, c)
 
         if self.preconditioner == "lumped":
-            precond = partial(lumped_preconditioner, st.K, Bt_orig, st.lambda_ids, nl)
+            precond = partial(precond_fn, *precond_args)
         elif self.preconditioner == "none":
             precond = None
         else:
             raise ValueError(f"unknown preconditioner {self.preconditioner!r}")
 
-        d = dual_rhs(st.L, st.Btp, st.fp, st.lambda_ids, nl, c)
         lam0 = coarse.lambda0()
 
         t0 = time.perf_counter()
@@ -139,6 +175,7 @@ class FetiSolver:
             lambda d_, lam0_: pcpg(
                 apply_F, coarse.project, d_, lam0_,
                 precondition=precond, tol=tol, max_iter=max_iter,
+                mesh=st.mesh,
             )
         )
         res: PCPGResult = run(d, lam0)
@@ -160,11 +197,13 @@ class FetiSolver:
                 L, b[:, None], left_side=True, lower=True, transpose_a=True
             )[:, 0]
         )(st.L, t)
-        # back to original node order + rigid body (constant) correction
+        # back to original node order + rigid body (constant) correction;
+        # drop any inert mesh-padding subdomains (S_real == S unsharded)
         inv_perm = np.argsort(st.node_perm)
-        u = np.asarray(up)[:, inv_perm] + (
-            np.asarray(alpha)[:, None] * np.asarray(st.r_norm)[:, None]
-        )
+        up_h = np.asarray(up)[: st.S_real]
+        alpha = np.asarray(alpha)[: st.S_real]
+        r_norm_h = np.asarray(st.r_norm)[: st.S_real]
+        u = up_h[:, inv_perm] + alpha[:, None] * r_norm_h[:, None]
 
         # average duplicated interface copies onto the global mesh
         nn = prob.global_mesh.n_nodes

@@ -472,13 +472,18 @@ def main(argv=None) -> int:
                 if rec["status"] == "ok":
                     n_ok += 1
                     r = rec["roofline"]
+                    res_gib = rec["analytic_resident_bytes_per_dev"] / 2**30
+                    peak_gib = rec["cpu_backend_peak_bytes_per_dev"] / 2**30
+                    useful = r["useful_ratio"]
+                    if useful is not None:
+                        useful = round(useful, 3)
                     print(
                         f"[dryrun] OK    {arch:22s} {shape:12s} "
                         f"{rec['mesh']:8s} {dt:6.1f}s "
-                        f"res/dev={rec['analytic_resident_bytes_per_dev'] / 2**30:6.2f}GiB "
-                        f"cpuPeak={rec['cpu_backend_peak_bytes_per_dev'] / 2**30:6.1f}GiB "
+                        f"res/dev={res_gib:6.2f}GiB "
+                        f"cpuPeak={peak_gib:6.1f}GiB "
                         f"dom={r['dominant']:10s} "
-                        f"useful={r['useful_ratio'] if r['useful_ratio'] is None else round(r['useful_ratio'], 3)}"
+                        f"useful={useful}"
                     )
                 else:
                     n_err += 1

@@ -11,9 +11,6 @@ unavoidable_time = max(model-flops time, mandatory-stream time):
 """
 from __future__ import annotations
 
-import json
-import sys
-
 from repro.launch.report import dryrun_table, load, roofline_table
 from repro.launch.roofline import HW
 
@@ -68,7 +65,7 @@ def main(argv=None):
     gains = [bd / max(od, 1e-30) for _, bd, od in rows_all]
     import statistics
 
-    print(f"\nmedian dominant-term gain across the grid: "
+    print("\nmedian dominant-term gain across the grid: "
           f"{statistics.median(gains):.2f}x; "
           f"max: {max(gains):.2f}x")
 

@@ -2,9 +2,42 @@
 never touches jax device initialization."""
 from __future__ import annotations
 
-import jax
+import os
+import re
+import sys
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+import jax
+import numpy as np
+
+__all__ = [
+    "make_production_mesh",
+    "make_local_mesh",
+    "make_feti_mesh",
+    "force_host_device_count",
+]
+
+
+def force_host_device_count(n: int) -> None:
+    """Ask XLA for ``n`` host-platform devices (CPU hosts standing in for a
+    multi-chip backend). Must run before the jax backend initializes.
+
+    Appends to ``XLA_FLAGS``; when the flag is already present with a
+    DIFFERENT count it warns and keeps the existing value — XLA reads the
+    first setting and cannot be overridden from here."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = re.search(r"--xla_force_host_platform_device_count=(\d+)", flags)
+    if m:
+        have = int(m.group(1))
+        if have != n:
+            print(
+                f"[mesh] XLA_FLAGS already forces {have} host device(s); "
+                f"keeping {have} (asked for {n})",
+                file=sys.stderr,
+            )
+        return
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={n}".strip()
+    )
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,3 +54,24 @@ def make_local_mesh():
     same launcher code run on this CPU container."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_feti_mesh(n_devices: int | None = None):
+    """FETI deployment mesh: one ``("data",)`` axis over the subdomains.
+
+    FETI has no model parallelism — every subdomain's factor/SC lives
+    whole on one device and only λ-sized psums cross devices
+    (:mod:`repro.feti.sharded`) — so the mesh is one data axis over the
+    first ``n_devices`` devices (default: all). Works on any backend,
+    including CPU hosts forced to N devices via
+    ``--xla_force_host_platform_device_count`` (see launch/solve_feti.py
+    ``--devices``).
+    """
+    devices = jax.devices()
+    if n_devices is None:
+        n_devices = len(devices)
+    if not 1 <= n_devices <= len(devices):
+        raise ValueError(
+            f"asked for {n_devices} devices, have {len(devices)}"
+        )
+    return jax.sharding.Mesh(np.array(devices[:n_devices]), ("data",))

@@ -6,11 +6,10 @@ from __future__ import annotations
 
 import json
 import sys
-from collections import defaultdict
 
 
 def load(path: str) -> list[dict]:
-    recs = [json.loads(l) for l in open(path)]
+    recs = [json.loads(line) for line in open(path)]
     # dedup: keep the LAST record per (arch, shape, mesh, status-kind)
     seen = {}
     for r in recs:
@@ -31,11 +30,14 @@ def fmt_s(x):
 
 
 def dryrun_table(recs) -> str:
-    rows = ["| arch | shape | mesh | status | res GiB/dev | FLOPs/dev | coll GiB/dev | #coll | compile s |",
+    rows = ["| arch | shape | mesh | status | res GiB/dev | FLOPs/dev "
+            "| coll GiB/dev | #coll | compile s |",
             "|---|---|---|---|---|---|---|---|---|"]
-    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"], x.get("mesh", ""))):
+    key = lambda x: (x["arch"], x["shape"], x.get("mesh", ""))  # noqa: E731
+    for r in sorted(recs, key=key):
         if r["status"] == "skipped":
-            rows.append(f"| {r['arch']} | {r['shape']} | - | SKIP: {r['reason']} | | | | | |")
+            rows.append(f"| {r['arch']} | {r['shape']} | - "
+                        f"| SKIP: {r['reason']} | | | | | |")
             continue
         ro = r["roofline"]
         rows.append(
@@ -50,7 +52,8 @@ def dryrun_table(recs) -> str:
 
 
 def roofline_table(recs, mesh="16x16") -> str:
-    rows = ["| arch | shape | compute s | memory s | collective s | dominant | MODEL_FLOPS | useful ratio | bottleneck note |",
+    rows = ["| arch | shape | compute s | memory s | collective s "
+            "| dominant | MODEL_FLOPS | useful ratio | bottleneck note |",
             "|---|---|---|---|---|---|---|---|---|"]
     notes = {
         ("compute"): "more MXU-efficient schedule / fewer executed flops",

@@ -10,22 +10,19 @@ undecomposed global solve.
 the planner of :mod:`repro.core.autotune` (the paper's Table-1 choice made
 automatically), prints the selected plan with predicted-vs-measured cost,
 and cross-checks the autotuned SCs against the dense baseline of [9].
+
+``--devices N`` shards the subdomain axis over an N-device ``("data",)``
+mesh (:mod:`repro.feti.sharded`). On hosts with fewer physical devices the
+flag forces N host-platform devices via XLA's
+``--xla_force_host_platform_device_count``, so the distributed pipeline is
+exercised end-to-end on this CPU container; combined with ``--validate``
+the sharded solution is additionally checked against a fresh single-device
+solve.
 """
 from __future__ import annotations
 
 import argparse
 import sys
-
-import jax
-
-jax.config.update("jax_enable_x64", True)
-
-import numpy as np
-
-from repro.configs import FetiArchConfig, get_config, get_smoke_config
-from repro.core import SchurAssemblyConfig
-from repro.fem import decompose_heat_problem
-from repro.feti import FetiSolver
 
 
 def main(argv=None) -> int:
@@ -36,12 +33,45 @@ def main(argv=None) -> int:
                    default="explicit")
     p.add_argument("--tol", type=float, default=1e-9)
     p.add_argument("--validate", action="store_true",
-                   help="compare against the global sparse solve")
+                   help="compare against the global sparse solve (and, "
+                        "with --devices, against a single-device solve)")
     p.add_argument("--autotune", action="store_true",
                    help="let the plan autotuner pick the assembly config")
     p.add_argument("--no-plan-cache", action="store_true",
                    help="ignore + don't write the on-disk plan cache")
+    p.add_argument("--devices", type=int, default=0, metavar="N",
+                   help="shard subdomains over an N-device ('data',) mesh "
+                        "(forces N host devices on CPU-only hosts)")
     args = p.parse_args(argv)
+
+    if args.devices:
+        # must precede jax backend init — which is why all jax work
+        # happens inside main
+        from repro.launch.mesh import force_host_device_count
+
+        force_host_device_count(args.devices)
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    import numpy as np
+
+    from repro.configs import FetiArchConfig, get_config, get_smoke_config
+    from repro.core import SchurAssemblyConfig
+    from repro.fem import decompose_heat_problem
+    from repro.feti import FetiSolver
+    from repro.launch.mesh import make_feti_mesh
+
+    mesh = None
+    if args.devices:
+        avail = len(jax.devices())
+        if avail < args.devices:
+            print(f"[feti] WARNING: asked for {args.devices} devices, "
+                  f"backend has {avail} (jax initialized early?); "
+                  f"using {avail}")
+        mesh = make_feti_mesh(min(args.devices, avail))
+        print(f"[feti] mesh: {mesh.shape['data']} device(s) on axis 'data'")
 
     fc = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if not isinstance(fc, FetiArchConfig):
@@ -59,7 +89,7 @@ def main(argv=None) -> int:
             block_size=fc.block_size, rhs_block_size=fc.rhs_block_size,
         )
     solver = FetiSolver(prob, cfg, mode=args.mode,
-                        plan_cache=not args.no_plan_cache)
+                        plan_cache=not args.no_plan_cache, mesh=mesh)
     sol = solver.solve(tol=args.tol)
 
     if args.autotune and solver.plan is not None:
@@ -89,6 +119,18 @@ def main(argv=None) -> int:
         print(f"[feti] rel err vs global solve: {err:.2e}")
         if err > 1e-6:
             return 1
+        if mesh is not None:
+            # the distributed run must reproduce the single-device one
+            ref = FetiSolver(prob, cfg, mode=args.mode,
+                             plan_cache=not args.no_plan_cache
+                             ).solve(tol=args.tol)
+            du = np.max(np.abs(sol.u_global - ref.u_global))
+            print(f"[feti] sharded vs single-device: max|Δu|={du:.2e} "
+                  f"iters {sol.iterations} vs {ref.iterations}")
+            if du > 1e-9 or sol.iterations != ref.iterations:
+                print("[feti] FAIL: sharded solve diverged from the "
+                      "single-device solve")
+                return 1
     return 0 if sol.converged else 1
 
 

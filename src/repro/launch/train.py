@@ -14,14 +14,12 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
 from repro.data import synthetic_batch
 from repro.distributed import (
     StepTimer,
     StragglerMonitor,
-    batch_shardings,
     latest_step,
     opt_state_shardings,
     param_shardings,

@@ -8,7 +8,7 @@ sharding rules and dry-run machinery.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 __all__ = ["ModelConfig"]
 

@@ -59,7 +59,8 @@ def apply_norm(params: dict, x, kind: str, eps: float):
 def init_dense(key, d_in: int, d_out: int, dtype, bias: bool = False,
                scale: float | None = None) -> dict:
     scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
-    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    p = {"w": w.astype(dtype)}
     if bias:
         p["b"] = jnp.zeros((d_out,), dtype)
     return p

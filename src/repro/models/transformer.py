@@ -10,7 +10,7 @@ first dense layer) are handled as prologue / scanned-cycles / epilogue.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -144,7 +144,7 @@ def init_stack(key, cfg: ModelConfig, dtype) -> dict:
                           lay.kind_of(cfg, layer), lay.moe_of(cfg, layer),
                           dtype)
 
-    params: dict = {"prologue": [block_at(l) for l in lay.prologue]}
+    params: dict = {"prologue": [block_at(li) for li in lay.prologue]}
     body = []
     base = len(lay.prologue)
     for j in range(P):
@@ -152,16 +152,19 @@ def init_stack(key, cfg: ModelConfig, dtype) -> dict:
         body.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_cycle)
                     if per_cycle else None)
     params["body"] = body
-    params["epilogue"] = [block_at(l) for l in lay.epilogue]
+    params["epilogue"] = [block_at(li) for li in lay.epilogue]
     return params
 
 
 def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
     lay = StackLayout.build(cfg)
     P = len(lay.pattern)
-    mk = lambda l: init_layer_cache(cfg, lay.kind_of(cfg, l), batch, max_len,
-                                    dtype)
-    cache: dict = {"prologue": [mk(l) for l in lay.prologue]}
+
+    def mk(li):
+        return init_layer_cache(cfg, lay.kind_of(cfg, li), batch, max_len,
+                                dtype)
+
+    cache: dict = {"prologue": [mk(li) for li in lay.prologue]}
     body = []
     base = len(lay.prologue)
     for j in range(P):
@@ -169,7 +172,7 @@ def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
         body.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_cycle)
                     if per_cycle else None)
     cache["body"] = body
-    cache["epilogue"] = [mk(l) for l in lay.epilogue]
+    cache["epilogue"] = [mk(li) for li in lay.epilogue]
     return cache
 
 
@@ -190,19 +193,22 @@ def apply_stack(
     aux = jnp.zeros((), jnp.float32)
 
     def run(x, p, kind, use_moe, c):
-        fn = lambda xx, pp, cc: apply_block(
-            pp, cfg, kind, use_moe, xx, positions, cc, cache_index, attn_args
-        )
+        def fn(xx, pp, cc):
+            return apply_block(
+                pp, cfg, kind, use_moe, xx, positions, cc, cache_index,
+                attn_args
+            )
+
         if remat:
             fn = jax.checkpoint(fn)
         return fn(x, p, c)
 
     new_cache: dict = {"prologue": [], "body": [], "epilogue": []}
 
-    for i, l in enumerate(lay.prologue):
+    for i, li in enumerate(lay.prologue):
         c = cache["prologue"][i] if cache is not None else None
-        x, nc, a = run(x, params["prologue"][i], lay.kind_of(cfg, l),
-                       lay.moe_of(cfg, l), c)
+        x, nc, a = run(x, params["prologue"][i], lay.kind_of(cfg, li),
+                       lay.moe_of(cfg, li), c)
         new_cache["prologue"].append(nc)
         aux = aux + a
 
@@ -241,10 +247,10 @@ def apply_stack(
             )
             new_cache["body"] = list(body_caches)
 
-    for i, l in enumerate(lay.epilogue):
+    for i, li in enumerate(lay.epilogue):
         c = cache["epilogue"][i] if cache is not None else None
-        x, nc, a = run(x, params["epilogue"][i], lay.kind_of(cfg, l),
-                       lay.moe_of(cfg, l), c)
+        x, nc, a = run(x, params["epilogue"][i], lay.kind_of(cfg, li),
+                       lay.moe_of(cfg, li), c)
         new_cache["epilogue"].append(nc)
         aux = aux + a
 

@@ -7,7 +7,6 @@ DESIGN.md §6); ≥100B configs default to bf16 moments.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +43,10 @@ def cosine_lr(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
 
 def adamw_init(params, cfg: OptimizerConfig) -> dict:
     mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
-    zeros = lambda p: jnp.zeros(p.shape, mdt)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, mdt)
+
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),

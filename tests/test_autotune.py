@@ -5,6 +5,7 @@ Covers the ISSUE-1 acceptance set: plan-cache hit determinism, agreement of
 and numerical agreement of autotuned assembly with the dense baseline.
 """
 import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +37,19 @@ from repro.testing import random_feti_like_bt
 def tmp_cache(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "plans"))
     return tmp_path / "plans"
+
+
+def test_plan_cache_dir_env_routing(tmp_path, monkeypatch):
+    """$REPRO_PLAN_CACHE_DIR (the canonical, CI-facing spelling) wins over
+    the legacy $REPRO_PLAN_CACHE, which wins over the home default —
+    re-read at every access, not captured at import."""
+    monkeypatch.delenv("REPRO_PLAN_CACHE_DIR", raising=False)
+    monkeypatch.delenv("REPRO_PLAN_CACHE", raising=False)
+    assert plan_cache_dir().endswith(os.path.join("repro", "plans"))
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "legacy"))
+    assert plan_cache_dir() == str(tmp_path / "legacy")
+    monkeypatch.setenv("REPRO_PLAN_CACHE_DIR", str(tmp_path / "canonical"))
+    assert plan_cache_dir() == str(tmp_path / "canonical")
 
 
 def _pattern(n=96, m=40, seed=0):

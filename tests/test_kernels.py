@@ -3,7 +3,6 @@
 Shape/dtype sweeps + hypothesis property tests per the kernel contract:
 every (pattern, block size, dtype) must match ref.py to tolerance.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

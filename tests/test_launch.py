@@ -2,7 +2,6 @@
 correction), the analytic FLOP/byte model, shape-grid rules."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config
