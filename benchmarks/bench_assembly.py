@@ -1,8 +1,12 @@
 """Paper Fig. 8: whole explicit SC assembly — separated (factor given) and
 mixed (numerical factorization + assembly together) configurations,
-optimized pipeline vs the dense §3.1 baseline.
+optimized pipeline vs the dense §3.1 baseline, plus the packed-vs-dense
+factor-storage comparison (time AND device bytes: the packed layout keeps
+only the fill mask's blocks on device, docs/packed_storage.md).
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -13,8 +17,9 @@ from repro.core import (
     make_assembler,
     schur_dense_baseline,
 )
+from repro.sparse import block_cholesky_packed, pack_factor
 from repro.sparse.cholesky import block_cholesky, block_cholesky_flops
-from benchmarks.common import emit, subdomain_problem, time_fn
+from benchmarks.common import device_bytes, emit, subdomain_problem, time_fn
 
 
 def run(sizes_2d=(16, 24), sizes_3d=(6, 9), bs: int = 32,
@@ -29,7 +34,11 @@ def run(sizes_2d=(16, 24), sizes_3d=(6, 9), bs: int = 32,
             meta, mask = prob["meta"], prob["mask"]
             n = prob["n"]
             tag = f"{dim}d/n{n}"
-            cfg = SchurAssemblyConfig(block_size=bs, rhs_block_size=bs)
+            # storage pinned: these rows ARE the dense-stored reference the
+            # packed rows below compare against (REPRO_STORAGE must not
+            # flip them under the CI packed lane)
+            cfg = SchurAssemblyConfig(block_size=bs, rhs_block_size=bs,
+                                      storage="dense")
 
             opt = jax.jit(make_assembler(meta, cfg, mask))
             t_sep_opt = time_fn(opt, L, Bt, reps=reps)
@@ -52,6 +61,30 @@ def run(sizes_2d=(16, 24), sizes_3d=(6, 9), bs: int = 32,
                   + block_cholesky_flops(n, bs, mask))
             rows.append((f"assembly/{tag}/mix_opt", t_mix_opt,
                          f"speedup={t_mix_dense / t_mix_opt:.2f};flops={fl}"))
+
+            # packed factor storage: same assembly, factor lives as the
+            # fill-mask block stack — report time AND device bytes
+            index = prob["index"]
+            cfg_p = dataclasses.replace(cfg, storage="packed")
+            Lp = jax.block_until_ready(pack_factor(L, index))
+            packed = jax.jit(make_assembler(meta, cfg_p, mask))
+            t_sep_packed = time_fn(packed, Lp, Bt, reps=reps)
+            b_packed, b_dense = device_bytes(Lp), device_bytes(L)
+            rows.append((
+                f"assembly/{tag}/sep_packed", t_sep_packed,
+                f"speedup={t_sep_dense / t_sep_packed:.2f};"
+                f"L_bytes={b_packed};dense_L_bytes={b_dense};"
+                f"mem_ratio={b_packed / b_dense:.2f}"))
+
+            def mixed_packed(Kx, Bx):
+                Lx = block_cholesky_packed(Kx, index)
+                return make_assembler(meta, cfg_p, mask)(Lx, Bx)
+
+            t_mix_packed = time_fn(jax.jit(mixed_packed), K, Bt, reps=reps)
+            rows.append((
+                f"assembly/{tag}/mix_packed", t_mix_packed,
+                f"speedup={t_mix_dense / t_mix_packed:.2f};"
+                f"mem_ratio={b_packed / b_dense:.2f}"))
     return rows
 
 

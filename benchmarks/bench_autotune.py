@@ -47,7 +47,7 @@ def run(sizes_2d=(16, 24), sizes_3d=(6,), bs: int = 32,
 
             hand = SchurAssemblyConfig(
                 trsm_variant="factor_split", syrk_variant="input_split",
-                block_size=bs)
+                block_size=bs, storage="dense")
             hand_fn = jax.jit(
                 make_assembler(prob["meta"], hand, prob["mask"]))
             us_hand = time_fn(hand_fn, L, Bt, reps=reps)

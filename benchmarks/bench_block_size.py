@@ -20,7 +20,8 @@ def run(sizes_2d=(16, 24), sizes_3d=(6, 9),
         for e in sizes:
             for bs in block_sizes:
                 prob = subdomain_problem(dim, e, bs)
-                cfg = SchurAssemblyConfig(block_size=bs, rhs_block_size=bs)
+                cfg = SchurAssemblyConfig(block_size=bs, rhs_block_size=bs,
+                                          storage="dense")
                 fn = jax.jit(make_assembler(prob["meta"], cfg, prob["mask"]))
                 us = time_fn(fn, jax.numpy.asarray(prob["L"]),
                              jax.numpy.asarray(prob["Bt"]), reps=reps)

@@ -20,7 +20,7 @@ from repro.fem import decompose_heat_problem
 from repro.feti import FetiSolver
 from repro.feti.assembly import preprocess_cluster
 from repro.feti.operator import explicit_dual_apply, implicit_dual_apply
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, fmt_bytes, time_fn
 
 
 def run(cases=((2, (2, 2), (8, 8)), (2, (2, 2), (16, 16)),
@@ -31,11 +31,15 @@ def run(cases=((2, (2, 2), (8, 8)), (2, (2, 2), (16, 16)),
         prob = decompose_heat_problem(dim, grid, eps)
         n = prob.subdomains[0].n
         tag = f"{dim}d/n{n}"
-        cfg_opt = SchurAssemblyConfig(block_size=bs, rhs_block_size=bs)
+        # storage pinned to dense: these are the dense-stored references
+        # the preproc_expl_packed row compares against (REPRO_STORAGE must
+        # not flip them under the CI packed lane)
+        cfg_opt = SchurAssemblyConfig(block_size=bs, rhs_block_size=bs,
+                                      storage="dense")
         cfg_dense = SchurAssemblyConfig(trsm_variant="dense",
                                         syrk_variant="dense",
                                         block_size=bs, rhs_block_size=bs,
-                                        prune=False)
+                                        prune=False, storage="dense")
 
         import numpy as np
 
@@ -59,14 +63,23 @@ def run(cases=((2, (2, 2), (8, 8)), (2, (2, 2), (16, 16)),
             st = preprocess_cluster(prob, cfg, explicit=explicit)
             return st, us
 
+        import dataclasses
+
+        cfg_packed = dataclasses.replace(cfg_opt, storage="packed")
+
         st_impl, t_impl = preprocess_time(cfg_opt, explicit=False)
         _, t_expl_dense = preprocess_time(cfg_dense, explicit=True)
         st_expl, t_expl_opt = preprocess_time(cfg_opt, explicit=True)
-        rows.append((f"feti/{tag}/preproc_impl", t_impl, ""))
+        st_pack, t_expl_packed = preprocess_time(cfg_packed, explicit=True)
+        rows.append((f"feti/{tag}/preproc_impl", t_impl, fmt_bytes(st_impl)))
         rows.append((f"feti/{tag}/preproc_expl_dense", t_expl_dense,
                      f"slowdown_vs_impl={t_expl_dense / t_impl:.2f}"))
         rows.append((f"feti/{tag}/preproc_expl_opt", t_expl_opt,
-                     f"slowdown_vs_impl={t_expl_opt / t_impl:.2f}"))
+                     f"slowdown_vs_impl={t_expl_opt / t_impl:.2f};"
+                     + fmt_bytes(st_expl)))
+        rows.append((f"feti/{tag}/preproc_expl_packed", t_expl_packed,
+                     f"slowdown_vs_impl={t_expl_packed / t_impl:.2f};"
+                     + fmt_bytes(st_pack)))
 
         # per-iteration dual operator application
         nl = prob.n_lambda

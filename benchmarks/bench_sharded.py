@@ -27,12 +27,13 @@ force_host_device_count(_N_DEV)
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, fmt_bytes, time_fn
 from repro.core import SchurAssemblyConfig
 from repro.fem import decompose_heat_problem
 from repro.feti import sharded as shlib
 from repro.feti.assembly import preprocess_cluster
 from repro.launch.mesh import make_feti_mesh
+from repro.sparse import PackedBlocks
 
 
 def run(dim: int = 2, sub_grid=(4, 4), elems_per_sub=(16, 16),
@@ -67,7 +68,8 @@ def run(dim: int = 2, sub_grid=(4, 4), elems_per_sub=(16, 16),
 
         # preprocessing: re-run the compiled factorize+assemble the state
         # carries on already-placed stacks (multi-step regime, fixed pattern)
-        Kp = st.L @ jnp.swapaxes(st.L, -1, -2)  # any SPD stack, placed right
+        L_d = st.L.unpack() if isinstance(st.L, PackedBlocks) else st.L
+        Kp = L_d @ jnp.swapaxes(L_d, -1, -2)  # any SPD stack, placed right
         t_pre = time_fn(lambda a, b: st.prep(a, b)[1], Kp, st.Btp, reps=reps)
 
         lam = jax.device_put(jnp.zeros((nl,)), shlib.replicated_sharding(mesh))
@@ -81,7 +83,8 @@ def run(dim: int = 2, sub_grid=(4, 4), elems_per_sub=(16, 16),
         if nd == 1:
             base_preproc, base_expl, base_impl = t_pre, t_expl, t_impl
         rows.append((f"feti_sharded/{tag}/d{nd}/preproc", t_pre,
-                     f"speedup_vs_1dev={base_preproc / t_pre:.2f}"))
+                     f"speedup_vs_1dev={base_preproc / t_pre:.2f};"
+                     + fmt_bytes(st)))
         rows.append((f"feti_sharded/{tag}/d{nd}/iter_explicit", t_expl,
                      f"speedup_vs_1dev={base_expl / t_expl:.2f}"))
         rows.append((f"feti_sharded/{tag}/d{nd}/iter_implicit", t_impl,

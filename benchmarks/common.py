@@ -25,6 +25,8 @@ from repro.fem import (
 )
 from repro.fem.regularization import fixing_node_regularization
 from repro.sparse import (
+    PackedBlockIndex,
+    PackedBlocks,
     block_pattern,
     block_symbolic_cholesky,
     matrix_pattern_from_elems,
@@ -32,9 +34,36 @@ from repro.sparse import (
 )
 from repro.sparse.cholesky import block_cholesky
 
-__all__ = ["time_fn", "subdomain_problem", "emit", "HEADER"]
+__all__ = [
+    "time_fn",
+    "subdomain_problem",
+    "emit",
+    "HEADER",
+    "device_bytes",
+    "fmt_bytes",
+]
 
 HEADER = "name,us_per_call,derived"
+
+
+def device_bytes(x) -> int:
+    """Device bytes of an array stack or a PackedBlocks stack (0 for None)."""
+    if x is None:
+        return 0
+    if isinstance(x, PackedBlocks):
+        return x.nbytes
+    x = np.asarray(x) if not hasattr(x, "dtype") else x
+    return int(np.prod(x.shape)) * x.dtype.itemsize
+
+
+def fmt_bytes(st) -> str:
+    """``derived``-column fragment reporting the solution-phase stack bytes
+    — packed-vs-dense memory shows up in every bench table that carries a
+    cluster state."""
+    by = st.device_bytes()
+    return (f"storage={st.storage};L_bytes={by['L']};K_bytes={by['K']};"
+            f"Btp_bytes={by['Btp']};F_bytes={by['F']};"
+            f"dense_L_bytes={by['dense_L']}")
 
 
 def time_fn(fn: Callable, *args, reps: int = 5, warmup: int = 1) -> float:
@@ -82,7 +111,9 @@ def subdomain_problem(dim: int, elems_per_axis: int, block_size: int,
     Bt[rows, np.arange(m)] = rng.choice([-1.0, 1.0], m)
     meta = build_stepped_meta(Bt != 0, block_size=block_size,
                               rhs_block_size=rhs_block_size or block_size)
-    return dict(n=n, m=m, K=Kp, L=L, Bt=Bt, meta=meta, mask=mask)
+    index = PackedBlockIndex.from_mask(mask, n, block_size)
+    return dict(n=n, m=m, K=Kp, L=L, Bt=Bt, meta=meta, mask=mask,
+                index=index)
 
 
 def emit(rows: list[tuple]) -> None:

@@ -1,6 +1,10 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only <name>]
+    PYTHONPATH=src python -m benchmarks.run [--only <name>] [--dry]
+
+``--dry`` runs every module at smoke sizes with reps=1 — a CI-sized
+end-to-end exercise of the whole bench surface (including the packed
+storage rows), not a measurement.
 
 Emits ``name,us_per_call,derived`` CSV rows. Mapping to the paper:
     bench_block_size  — Fig. 5 / Table 1 (block-size hyperparameter)
@@ -31,11 +35,29 @@ MODULES = [
     "bench_lm",
 ]
 
+# smoke-sized kwargs for each module's run() under --dry: tiny problems,
+# one rep — exercises every code path (incl. packed-vs-dense rows) fast
+DRY_OVERRIDES = {
+    "bench_block_size": dict(sizes_2d=(8,), sizes_3d=(4,),
+                             block_sizes=(8, 16), reps=1),
+    "bench_variants": dict(sizes_2d=(8,), sizes_3d=(4,), bs=8, reps=1),
+    "bench_kernels": dict(sizes_2d=(8,), sizes_3d=(4,), bs=8, reps=1),
+    "bench_assembly": dict(sizes_2d=(8,), sizes_3d=(4,), bs=8, reps=1),
+    "bench_autotune": dict(sizes_2d=(8,), sizes_3d=(4,), bs=8, reps=1),
+    "bench_feti": dict(cases=((2, (2, 2), (4, 4)),), bs=8, reps=1),
+    "bench_sharded": dict(dim=2, sub_grid=(2, 2), elems_per_sub=(4, 4),
+                          bs=8, reps=1),
+    "bench_lm": dict(reps=1),
+}
+
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--only", default=None,
                    help="run a single bench module by name")
+    p.add_argument("--dry", action="store_true",
+                   help="smoke sizes + reps=1: exercise every bench path "
+                        "quickly (CI), numbers are not measurements")
     args = p.parse_args(argv)
 
     print(HEADER)
@@ -45,7 +67,12 @@ def main(argv=None) -> int:
             continue
         mod = __import__(f"benchmarks.{name}", fromlist=["main"])
         t1 = time.perf_counter()
-        mod.main()
+        if args.dry:
+            from benchmarks.common import emit
+
+            emit(mod.run(**DRY_OVERRIDES.get(name, {})))
+        else:
+            mod.main()
         print(f"# {name}: {time.perf_counter() - t1:.1f}s", file=sys.stderr)
     print(f"# total: {time.perf_counter() - t0:.1f}s", file=sys.stderr)
     return 0

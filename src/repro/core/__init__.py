@@ -25,7 +25,12 @@ from repro.core.stepped import (
     stepped_permutation,
 )
 from repro.core.syrk import syrk_dense, syrk_input_split, syrk_output_split
-from repro.core.trsm import trsm_dense, trsm_factor_split, trsm_rhs_split
+from repro.core.trsm import (
+    trsm_dense,
+    trsm_factor_split,
+    trsm_factor_split_packed,
+    trsm_rhs_split,
+)
 from repro.core.autotune import (
     Plan,
     assembly_cost,
@@ -60,5 +65,6 @@ __all__ = [
     "syrk_output_split",
     "trsm_dense",
     "trsm_factor_split",
+    "trsm_factor_split_packed",
     "trsm_rhs_split",
 ]

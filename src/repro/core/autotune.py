@@ -60,7 +60,8 @@ __all__ = [
 
 # Bump when the candidate space or the cost model changes shape: stale
 # cached plans from an older search must not be served for the new one.
-SPACE_VERSION = 1
+# v2: packed factor storage joined the space (storage= on every config).
+SPACE_VERSION = 2
 
 # Pallas kernels only run natively on TPU; elsewhere they fall back to
 # interpret mode, which is orders of magnitude slower. The model multiplies
@@ -75,20 +76,45 @@ _F64 = 8  # assembly dtype bytes (the FETI substrate runs f64)
 # byte-traffic + launch-count model (complements SteppedMeta's FLOP model)
 # --------------------------------------------------------------------------
 
+def _packed_blocks(meta: SteppedMeta,
+                   block_mask: Optional[np.ndarray]) -> int:
+    """Stored factor blocks under packed storage: the fill mask's nnz, or
+    the full lower triangle when no symbolic mask is available."""
+    nb = meta.num_row_blocks
+    if block_mask is None:
+        return nb * (nb + 1) // 2
+    return int(np.tril(np.asarray(block_mask)).sum())
+
+
 def _trsm_bytes_ops(meta: SteppedMeta, cfg: SchurAssemblyConfig,
                     block_mask: Optional[np.ndarray], db: int
                     ) -> Tuple[float, int]:
     n, m = meta.n, meta.m
+    packed = cfg.storage == "packed"
     if cfg.use_pallas and cfg.trsm_variant != "dense":
-        # single fused launch; streams padded L, Linv and B/Y once
-        n_pad = meta.num_row_blocks * meta.block_size
+        # single fused launch; streams the factor (packed: only the stored
+        # blocks + the SMEM block index), Linv and B/Y once
+        bs = meta.block_size
+        n_pad = meta.num_row_blocks * bs
         m_pad = meta.num_col_blocks * meta.rhs_block_size
-        return db * (n_pad * n_pad / 2 + n_pad * meta.block_size
-                     + 2 * n_pad * m_pad), 1
+        if packed:
+            factor = _packed_blocks(meta, block_mask) * bs * bs
+        else:
+            factor = n_pad * n_pad / 2
+        return db * (factor + n_pad * bs + 2 * n_pad * m_pad), 1
     if cfg.trsm_variant == "dense":
-        return db * (n * n / 2 + 2 * n * m), 1
+        extra = 0.0
+        if packed:
+            # transient densify of the packed factor before the library TRSM
+            extra = _packed_blocks(meta, block_mask) * meta.block_size ** 2 \
+                + n * n / 2
+        return db * (n * n / 2 + 2 * n * m + extra), 1 + int(packed)
     if cfg.trsm_variant == "rhs_split":
         total, ops = 0.0, 0
+        if packed:  # transient densify before the per-stripe solves
+            total += db * (_packed_blocks(meta, block_mask)
+                           * meta.block_size ** 2 + n * n / 2)
+            ops += 1
         for c in range(meta.num_col_blocks):
             c0, c1 = meta.col_block(c)
             s = int(meta.col_starts[c])
@@ -98,11 +124,12 @@ def _trsm_bytes_ops(meta: SteppedMeta, cfg: SchurAssemblyConfig,
             total += db * (nn * nn / 2 + 2 * nn * (c1 - c0))
             ops += 1
         return total, ops
-    # factor_split
+    # factor_split: packed storage prunes structurally (absent blocks are
+    # never addressed), so it always takes the masked accounting
     total, ops = 0.0, 0
     nb = meta.num_row_blocks
-    mask = np.asarray(block_mask) if (cfg.prune and block_mask is not None) \
-        else None
+    mask = np.asarray(block_mask) \
+        if ((cfg.prune or packed) and block_mask is not None) else None
     for k in range(nb):
         r0, r1 = meta.row_block(k)
         b = r1 - r0
@@ -208,28 +235,55 @@ def default_block_sizes(n: int) -> Tuple[int, ...]:
 
 
 def enumerate_space(block_sizes: Sequence[int],
-                    interpret: bool = False) -> list[SchurAssemblyConfig]:
-    """The full Table-1 design space, canonicalized.
+                    interpret: bool = False,
+                    storage: Optional[str] = None
+                    ) -> list[SchurAssemblyConfig]:
+    """The full Table-1 design space, canonicalized — now including the
+    factor storage layout.
 
-    3 TRSM x 3 SYRK x |block_sizes| x prune on/off x pallas on/off, minus
-    structural duplicates: ``prune`` only affects non-pallas
-    ``factor_split`` TRSM, and ``use_pallas`` is an identity when both
-    variants are "dense" (the pallas kernels only cover split variants).
+    3 TRSM x 3 SYRK x |block_sizes| x prune on/off x pallas on/off x
+    storage, minus structural duplicates: ``prune`` only affects non-pallas
+    ``factor_split`` TRSM, ``use_pallas`` is an identity when both variants
+    are "dense" (the pallas kernels only cover split variants), and packed
+    storage is only enumerated where it is native (``factor_split`` TRSM
+    and the Pallas kernels — elsewhere it densifies transiently and can
+    never beat its dense twin). ``storage`` restricts the space to one
+    layout ("dense"/"packed"); ``None`` enumerates both.
     """
+    if storage not in (None, "dense", "packed"):
+        raise ValueError(f"storage must be None|dense|packed, got {storage!r}")
+    want = ("dense", "packed") if storage is None else (storage,)
     out = []
     for bs in block_sizes:
         for tv in TRSM_VARIANTS:
             for sv in SYRK_VARIANTS:
-                prunes = (False, True) if tv == "factor_split" else (False,)
-                for prune in prunes:
+                if "dense" in want:
+                    prunes = (False, True) if tv == "factor_split" \
+                        else (False,)
+                    for prune in prunes:
+                        out.append(SchurAssemblyConfig(
+                            trsm_variant=tv, syrk_variant=sv, block_size=bs,
+                            prune=prune, use_pallas=False, storage="dense"))
+                if "packed" in want and tv == "factor_split":
                     out.append(SchurAssemblyConfig(
                         trsm_variant=tv, syrk_variant=sv, block_size=bs,
-                        prune=prune, use_pallas=False))
+                        prune=True, use_pallas=False, storage="packed"))
                 if tv == "dense" and sv == "dense":
                     continue
-                out.append(SchurAssemblyConfig(
-                    trsm_variant=tv, syrk_variant=sv, block_size=bs,
-                    prune=False, use_pallas=True, interpret=interpret))
+                if "dense" in want:
+                    out.append(SchurAssemblyConfig(
+                        trsm_variant=tv, syrk_variant=sv, block_size=bs,
+                        prune=False, use_pallas=True, interpret=interpret,
+                        storage="dense"))
+                if "packed" in want and tv == "factor_split":
+                    out.append(SchurAssemblyConfig(
+                        trsm_variant=tv, syrk_variant=sv, block_size=bs,
+                        prune=False, use_pallas=True, interpret=interpret,
+                        storage="packed"))
+    if not out:
+        # storage="packed" with no native candidate shape cannot happen
+        # (factor_split is always enumerated), but guard anyway
+        raise ValueError("empty candidate space")
     return out
 
 
@@ -284,13 +338,15 @@ def pattern_fingerprint(pivots: np.ndarray, n: int, m: int,
 
 
 def _cache_key(fingerprint: str, device: DeviceModel,
-               block_sizes: Sequence[int], measured: bool) -> str:
+               block_sizes: Sequence[int], measured: bool,
+               storage: Optional[str] = None) -> str:
     # `measured` is part of the key: a model-only plan must never be served
     # to a measure="auto" caller (it would silently skip the measured
-    # refinement and its never-slower-than-dense guarantee), nor vice versa
+    # refinement and its never-slower-than-dense guarantee), nor vice versa.
+    # `storage` restrictions likewise search a different space.
     h = hashlib.sha256()
     h.update(f"v{SPACE_VERSION}:{device.kind}:{fingerprint}:"
-             f"{int(measured)}:".encode())
+             f"{int(measured)}:{storage or 'any'}:".encode())
     h.update(",".join(str(b) for b in sorted(block_sizes)).encode())
     return h.hexdigest()
 
@@ -334,7 +390,8 @@ class Plan:
         lines = [
             f"plan[{self.device}] trsm={c.trsm_variant} "
             f"syrk={c.syrk_variant} block={c.block_size} "
-            f"rhs_block={c.rhs_bs} prune={c.prune} pallas={c.use_pallas}"
+            f"rhs_block={c.rhs_bs} prune={c.prune} pallas={c.use_pallas} "
+            f"storage={c.storage}"
             f"{' (cached)' if self.from_cache else ''}",
             f"  predicted {self.predicted_s * 1e6:9.1f}us  "
             f"(dense baseline {self.baseline_predicted_s * 1e6:.1f}us, "
@@ -436,6 +493,7 @@ def plan_from_builder(
     device: Optional[DeviceModel] = None,
     cache: bool = True,
     reps: int = 5,
+    storage: Optional[str] = None,
 ) -> Plan:
     """Core search: builder-parameterized so the cluster path can score the
     true *envelope* metadata it will execute with (see feti.assembly).
@@ -443,6 +501,10 @@ def plan_from_builder(
     ``measure``: "auto" refines the model's top-k with timed micro-runs
     ("never"/"model" skips them — pure roofline ranking). Pallas candidates
     are measured only on TPU (interpret timing is meaningless).
+
+    ``storage`` restricts the search to one factor layout ("dense" |
+    "packed"); ``None`` searches both and the winning plan's
+    ``cfg.storage`` records the choice.
     """
     if measure not in ("auto", "never", "model"):
         raise ValueError(f"measure must be auto|never|model, got {measure!r}")
@@ -454,14 +516,15 @@ def plan_from_builder(
         block_sizes = default_block_sizes(n)
 
     key = _cache_key(fingerprint, device, block_sizes,
-                     measured=(measure == "auto"))
+                     measured=(measure == "auto"), storage=storage)
     if cache:
         hit = _load_cached(key)
         if hit is not None:
             return hit
 
     interpret = device.kind != "tpu"
-    candidates = enumerate_space(block_sizes, interpret=interpret)
+    candidates = enumerate_space(block_sizes, interpret=interpret,
+                                 storage=storage)
 
     # score every candidate with the roofline model; metas/masks are shared
     # per (block_size, rhs_block_size) so the builder runs once per size
@@ -478,7 +541,7 @@ def plan_from_builder(
 
     dense_cfg = SchurAssemblyConfig(
         trsm_variant="dense", syrk_variant="dense",
-        block_size=min(block_sizes), prune=False)
+        block_size=min(block_sizes), prune=False, storage="dense")
     bk = (dense_cfg.block_size, dense_cfg.rhs_bs)
     if bk not in built:
         built[bk] = meta_builder(*bk)
@@ -504,12 +567,23 @@ def plan_from_builder(
 
         def _measure(t):
             _, cfg, meta, mask = t
-            if cfg.is_dense_baseline:
+            if cfg.is_dense_baseline and cfg.storage == "dense":
                 # byte-identical program to schur_dense_baseline (the
                 # permutation-skip fast path) — reuse its timing
                 return baseline_meas
+            Lrun = L
+            if cfg.storage == "packed":
+                # packing happens once in preprocessing, so it is kept out
+                # of the timed region — the assembler sees the packed stack
+                from repro.sparse.packed import (
+                    pack_factor,
+                    packed_block_index_for,
+                )
+
+                index = packed_block_index_for(mask, meta.n, cfg.block_size)
+                Lrun = jax.block_until_ready(pack_factor(L, index))
             assembler = jax.jit(make_assembler(meta, cfg, mask))
-            return _time_best(assembler, L, Bt, reps=reps)
+            return _time_best(assembler, Lrun, Bt, reps=reps)
 
         # Two-stage measured refinement. The roofline model is only trusted
         # to rank candidates WITHIN a variant family (it can misjudge a
@@ -524,21 +598,24 @@ def plan_from_builder(
                     if not (t[1].use_pallas and device.kind != "tpu")]
         stage1: dict = {}
         for t in runnable:  # runnable is model-score sorted
-            pair = (t[1].trsm_variant, t[1].syrk_variant)
+            pair = (t[1].trsm_variant, t[1].syrk_variant, t[1].storage)
             stage1.setdefault(pair, t)
         results = [(_measure(t), t) for t in stage1.values()]
         _, win = min(results, key=lambda r: r[0])
-        win_pair = (win[1].trsm_variant, win[1].syrk_variant)
+        win_pair = (win[1].trsm_variant, win[1].syrk_variant, win[1].storage)
         stage2 = [t for t in runnable
-                  if (t[1].trsm_variant, t[1].syrk_variant) == win_pair
+                  if (t[1].trsm_variant, t[1].syrk_variant,
+                      t[1].storage) == win_pair
                   and t is not stage1[win_pair]][:top_k]
         results += [(_measure(t), t) for t in stage2]
 
         best_meas, (best_s, best_cfg, best_meta, best_mask) = \
             min(results, key=lambda r: r[0])
         measured_s = best_meas
-        if baseline_meas < best_meas:
+        if baseline_meas < best_meas and storage != "packed":
             # noise guard: never ship a plan measured slower than dense
+            # (unless the caller pinned packed storage — then the layout
+            # is a requirement, not a candidate)
             best_s, best_cfg = baseline_pred, dense_cfg
             measured_s = baseline_meas
 
@@ -566,6 +643,7 @@ def plan_assembly(
     top_k: int = 8,
     device: Optional[DeviceModel] = None,
     cache: bool = True,
+    storage: Optional[str] = None,
 ) -> Plan:
     """Plan the SC assembly for one B-transpose sparsity ``pattern``.
 
@@ -602,4 +680,4 @@ def plan_assembly(
     fp = pattern_fingerprint(column_pivots(pattern), n, m, extra=extra)
     return plan_from_builder(
         builder, fp, block_sizes=block_sizes, n_hint=n, measure=measure,
-        top_k=top_k, device=device, cache=cache)
+        top_k=top_k, device=device, cache=cache, storage=storage)

@@ -22,6 +22,7 @@ automatically (pass ``cfg="auto"`` to the FETI preprocessing/solver).
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Callable, Optional
 
 import jax
@@ -42,6 +43,14 @@ __all__ = [
 
 TRSM_VARIANTS = ("dense", "rhs_split", "factor_split")
 SYRK_VARIANTS = ("dense", "input_split", "output_split")
+STORAGE_VARIANTS = ("dense", "packed")
+
+
+def _default_storage() -> str:
+    """Process-wide default factor storage; the CI packed lane runs the
+    whole suite with ``REPRO_STORAGE=packed`` to prove the packed layout is
+    a drop-in default, not a special-cased code path."""
+    return os.environ.get("REPRO_STORAGE", "dense")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +67,13 @@ class SchurAssemblyConfig:
         updates (needs a block fill mask; paper's "pruning").
       use_pallas: dispatch TRSM/SYRK to the Pallas TPU kernels.
       interpret: run Pallas kernels in interpret mode (CPU validation).
+      storage: factor storage layout, "dense" (a (n, n) array) or "packed"
+        (a :class:`repro.sparse.packed.PackedBlocks`: the symbolic fill
+        mask IS the layout — O(nnz_blocks) device memory). Packed storage
+        is native for ``factor_split`` TRSM and the Pallas kernels; the
+        "dense"/"rhs_split" TRSM variants densify the factor transiently
+        inside the compiled program (correct, but without the memory win
+        during that op). Default comes from ``$REPRO_STORAGE`` ("dense").
     """
 
     trsm_variant: str = "factor_split"
@@ -67,12 +83,15 @@ class SchurAssemblyConfig:
     prune: bool = True
     use_pallas: bool = False
     interpret: bool = False
+    storage: str = dataclasses.field(default_factory=_default_storage)
 
     def __post_init__(self):
         if self.trsm_variant not in TRSM_VARIANTS:
             raise ValueError(f"trsm_variant must be one of {TRSM_VARIANTS}")
         if self.syrk_variant not in SYRK_VARIANTS:
             raise ValueError(f"syrk_variant must be one of {SYRK_VARIANTS}")
+        if self.storage not in STORAGE_VARIANTS:
+            raise ValueError(f"storage must be one of {STORAGE_VARIANTS}")
 
     @property
     def rhs_bs(self) -> int:
@@ -85,11 +104,48 @@ class SchurAssemblyConfig:
         return self.trsm_variant == "dense" and self.syrk_variant == "dense"
 
 
+def _coerce_factor(L, meta, cfg, block_mask):
+    """Align the runtime factor representation with ``cfg.storage``.
+
+    Packed configs pack a dense factor on the fly (index from the block
+    mask, or the full lower triangle when no symbolic info is available);
+    dense configs unpack a packed factor. Either coercion happens inside
+    the compiled program — callers that preprocess in the right layout
+    (feti.assembly) never pay it.
+    """
+    from repro.sparse.packed import (
+        PackedBlocks,
+        pack_factor,
+        packed_block_index_for,
+    )
+
+    packed = isinstance(L, PackedBlocks)
+    if cfg.storage == "packed" and not packed:
+        index = packed_block_index_for(block_mask, meta.n, meta.block_size)
+        return pack_factor(L, index)
+    if cfg.storage == "dense" and packed:
+        return L.unpack()
+    return L
+
+
 def _trsm(L, Bp, meta, cfg, block_mask):
+    from repro.sparse.packed import PackedBlocks
+
+    packed = isinstance(L, PackedBlocks)
     if cfg.use_pallas and cfg.trsm_variant != "dense":
         from repro.kernels import ops as kops  # lazy: avoid import cycle
 
+        if packed:
+            return kops.stepped_trsm_packed(L, Bp, meta,
+                                            interpret=cfg.interpret)
         return kops.stepped_trsm(L, Bp, meta, interpret=cfg.interpret)
+    if packed and cfg.trsm_variant == "factor_split":
+        # pruning is structural in packed storage: absent blocks don't exist
+        return trsm_mod.trsm_factor_split_packed(L, Bp, meta)
+    if packed:
+        # dense/rhs_split TRSM need the trailing subfactor as one array:
+        # densify transiently inside the compiled program
+        L = L.unpack()
     if cfg.trsm_variant == "dense":
         return trsm_mod.trsm_dense(L, Bp)
     if cfg.trsm_variant == "rhs_split":
@@ -122,14 +178,20 @@ def make_assembler(
     column order and ``F`` is the (m, m) dense SC in the original order.
     The permutation in/out is part of the compiled program (paper §4.4
     includes it in the measured assembly, so do we).
+
+    ``L`` is a dense (n, n) factor or a packed
+    :class:`~repro.sparse.packed.PackedBlocks` — whichever does not match
+    ``cfg.storage`` is coerced inside the compiled program, so callers that
+    preprocess in the configured layout pay nothing.
     """
     if cfg.is_dense_baseline:
         # dense TRSM + dense SYRK never look at the stepped metadata, so
         # the in/out permutation would be pure overhead: F = (L⁻¹Bᵀ)ᵀL⁻¹Bᵀ
         # is permutation-equivariant. This makes the dense/dense candidate
         # of the autotuner cost-identical to schur_dense_baseline.
-        def assemble_dense(L: jax.Array, Bt: jax.Array) -> jax.Array:
-            Y = _trsm(L, Bt, meta, cfg, block_mask)
+        def assemble_dense(L, Bt: jax.Array) -> jax.Array:
+            Y = _trsm(_coerce_factor(L, meta, cfg, block_mask), Bt, meta,
+                      cfg, block_mask)
             return _syrk(Y, meta, cfg)
 
         return assemble_dense
@@ -137,9 +199,10 @@ def make_assembler(
     perm = jnp.asarray(meta.perm)
     inv = jnp.asarray(meta.inv_perm)
 
-    def assemble(L: jax.Array, Bt: jax.Array) -> jax.Array:
+    def assemble(L, Bt: jax.Array) -> jax.Array:
         Bp = Bt[:, perm]
-        Y = _trsm(L, Bp, meta, cfg, block_mask)
+        Y = _trsm(_coerce_factor(L, meta, cfg, block_mask), Bp, meta, cfg,
+                  block_mask)
         Fp = _syrk(Y, meta, cfg)
         # permute back: F[i, j] = Fp[inv[i], inv[j]]
         return Fp[inv][:, inv]

@@ -36,6 +36,7 @@ __all__ = [
     "trsm_dense",
     "trsm_rhs_split",
     "trsm_factor_split",
+    "trsm_factor_split_packed",
 ]
 
 
@@ -113,4 +114,47 @@ def trsm_factor_split(
                     continue
                 i0, i1 = meta.row_block(i)
                 Y = Y.at[i0:i1, :w].add(-(L[i0:i1, r0:r1] @ Yk))
+    return Y
+
+
+def trsm_factor_split_packed(L, B: jax.Array, meta: SteppedMeta) -> jax.Array:
+    """Factor splitting on a PACKED factor (repro.sparse.packed).
+
+    Same blocked forward substitution as :func:`trsm_factor_split`, but the
+    factor blocks are gathered from the packed value stack instead of sliced
+    out of a dense (n, n) array — pruning is inherent: blocks absent from
+    the packed layout simply do not exist. Ragged last blocks are handled by
+    static slicing of the (identity-padded) stored tiles, so results match
+    the dense-masked path bit-for-bit.
+    """
+    from repro.sparse.packed import PackedBlocks
+
+    if not isinstance(L, PackedBlocks):
+        raise TypeError("trsm_factor_split_packed expects a PackedBlocks "
+                        f"factor, got {type(L).__name__}")
+    index = L.index
+    vals = L.values
+    if B.shape != (meta.n, meta.m):
+        raise ValueError(f"B shape {B.shape} != meta ({meta.n},{meta.m})")
+    if (index.bs, index.n) != (meta.block_size, meta.n):
+        raise ValueError(
+            f"packed index (n={index.n}, bs={index.bs}) does not match "
+            f"stepped meta (n={meta.n}, bs={meta.block_size})")
+    nb = meta.num_row_blocks
+    Y = B
+    n = meta.n
+    for k in range(nb):
+        r0, r1 = meta.row_block(k)
+        b = r1 - r0
+        w = int(meta.widths[k])
+        if w == 0:
+            continue
+        Lkk = vals[index.slot(k, k)][:b, :b]
+        Yk = _solve_lower(Lkk, Y[r0:r1, :w])
+        Y = Y.at[r0:r1, :w].set(Yk)
+        if r1 >= n:
+            continue
+        for i, s in index.col_slots(k):
+            i0, i1 = meta.row_block(i)
+            Y = Y.at[i0:i1, :w].add(-(vals[s][: i1 - i0, :b] @ Yk))
     return Y

@@ -45,6 +45,11 @@ from repro.sparse import (
     rcm_order,
 )
 from repro.sparse.cholesky import block_cholesky
+from repro.sparse.packed import (
+    PackedBlockIndex,
+    PackedBlocks,
+    block_cholesky_packed,
+)
 
 __all__ = ["ClusterState", "preprocess_cluster", "batched_assemble"]
 
@@ -66,11 +71,14 @@ class ClusterState:
     env: SteppedMeta  # shared stepped envelope (identity column perm)
     block_mask: np.ndarray  # factor block fill mask (shared)
     node_perm: np.ndarray  # fill-reducing node permutation (shared)
+    index: PackedBlockIndex  # packed block layout derived from block_mask
     # device arrays, leading axis = subdomain:
-    L: jax.Array  # (S, n, n) Cholesky factors of permuted K_reg
+    # (S, n, n) Cholesky factors of permuted K_reg, or the packed
+    # (S, n_blocks, bs, bs) stack when cfg.storage == "packed"
+    L: Union[jax.Array, PackedBlocks]
     Btp: jax.Array  # (S, n, m_max) row-permuted B̃ᵀ (factor order)
-    K: jax.Array  # (S, n, n) original (unregularized) K, for the
-    #               lumped preconditioner
+    K: PackedBlocks  # packed permuted unregularized K (lumped
+    #                  preconditioner); no dense (S, n, n) K is kept
     F: Optional[jax.Array]  # (S, m_max, m_max) explicit SC, or None (implicit)
     f: jax.Array  # (S, n) loads (original node order)
     fp: jax.Array  # (S, n) loads (factor order)
@@ -92,16 +100,49 @@ class ClusterState:
     @property
     def S(self) -> int:
         """Stacked subdomain count (including any mesh padding)."""
-        return self.L.shape[0]
+        L = self.L
+        return (L.values if isinstance(L, PackedBlocks) else L).shape[0]
 
     @property
     def S_real(self) -> int:
         """Actual subdomain count (excluding mesh padding)."""
         return self.n_real if self.n_real is not None else self.S
 
+    @property
+    def storage(self) -> str:
+        """Factor storage layout actually held ("dense" | "packed")."""
+        return "packed" if isinstance(self.L, PackedBlocks) else "dense"
+
+    def device_bytes(self) -> dict:
+        """Device bytes of the persistent solution-phase stacks.
+
+        ``K`` is always packed; ``L`` is packed or dense per
+        ``cfg.storage``; ``dense_L``/``dense_K`` report what the dense
+        (S, n, n) stacks would cost — the packed-vs-dense headline number.
+        """
+        def nbytes(x):
+            if x is None:
+                return 0
+            if isinstance(x, PackedBlocks):
+                return x.nbytes
+            return int(np.prod(x.shape)) * x.dtype.itemsize
+
+        n = self.index.n
+        dense_one = self.S * n * n * jnp.result_type(self.Btp).itemsize
+        out = {
+            "L": nbytes(self.L),
+            "K": nbytes(self.K),
+            "Btp": nbytes(self.Btp),
+            "F": nbytes(self.F),
+            "dense_L": dense_one,
+            "dense_K": dense_one,
+        }
+        out["total"] = out["L"] + out["K"] + out["Btp"] + out["F"]
+        return out
+
 
 def batched_assemble(
-    L: jax.Array,
+    L: Union[jax.Array, PackedBlocks],
     Btp: jax.Array,
     col_perm: Optional[jax.Array],
     inv_col_perm: Optional[jax.Array],
@@ -140,6 +181,7 @@ def make_cluster_preprocessor(
     measure: str = "auto",
     plan_cache: bool = True,
     mesh=None,
+    storage: Optional[str] = None,
 ):
     """Build the COMPILED preprocessing function for one decomposition.
 
@@ -216,10 +258,15 @@ def make_cluster_preprocessor(
             # without explicit assembly only the factorization block size
             # matters — don't burn timed assembly micro-runs on it
             measure=measure if explicit else "never",
-            cache=plan_cache)
+            cache=plan_cache, storage=storage)
         cfg = plan.cfg
+    elif storage is not None and storage != cfg.storage:
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, storage=storage)
 
     metas, env, block_mask = _symbolic(cfg.block_size, cfg.rhs_bs)
+    index = PackedBlockIndex.from_mask(block_mask, n, cfg.block_size)
     col_perms = np.empty((S, m_max), dtype=np.int64)
     inv_col_perms = np.empty((S, m_max), dtype=np.int64)
     for i, me in enumerate(metas):
@@ -228,13 +275,20 @@ def make_cluster_preprocessor(
 
     cp = jnp.asarray(col_perms)
     icp = jnp.asarray(inv_col_perms)
+    packed = cfg.storage == "packed"
+
+    def _factorize(Kp_l):
+        """Batched numerical factorization in the configured storage."""
+        if packed:
+            return jax.vmap(lambda A: block_cholesky_packed(A, index))(Kp_l)
+        return jax.vmap(
+            lambda A: block_cholesky(A, cfg.block_size, mask=block_mask)
+        )(Kp_l)
 
     if mesh is None:
 
         def prep(Kp_stack, Btp_stack):
-            L = jax.vmap(
-                lambda A: block_cholesky(A, cfg.block_size, mask=block_mask)
-            )(Kp_stack)
+            L = _factorize(Kp_stack)
             if not explicit:
                 return L, None
             F = batched_assemble(L, Btp_stack, cp, icp, env, cfg, block_mask)
@@ -244,9 +298,7 @@ def make_cluster_preprocessor(
         from jax.sharding import PartitionSpec as P
 
         def _local(Kp_l, Btp_l):
-            L_l = jax.vmap(
-                lambda A: block_cholesky(A, cfg.block_size, mask=block_mask)
-            )(Kp_l)
+            L_l = _factorize(Kp_l)
             if not explicit:
                 return (L_l,)
             # columns were relabeled host-side: the col_perm=None fast path
@@ -265,7 +317,8 @@ def make_cluster_preprocessor(
             return outs if explicit else (outs[0], None)
 
     static = dict(node_perm=node_perm, block_mask=block_mask, env=env,
-                  col_perm=cp, inv_col_perm=icp, cfg=cfg, plan=plan)
+                  col_perm=cp, inv_col_perm=icp, cfg=cfg, plan=plan,
+                  index=index)
     return static, jax.jit(prep)
 
 
@@ -278,6 +331,7 @@ def preprocess_cluster(
     measure: str = "auto",
     plan_cache: bool = True,
     mesh=None,
+    storage: Optional[str] = None,
 ) -> ClusterState:
     """Paper §2.2 'preprocessing': factorize every K_i and (if explicit)
     assemble every F̃ᵢ with the sparsity-utilizing pipeline.
@@ -285,6 +339,14 @@ def preprocess_cluster(
     Pass ``cfg="auto"`` to let the autotuner pick the variant/block-size
     plan (see :mod:`repro.core.autotune`); the chosen plan is available as
     ``ClusterState.plan`` and the resolved config as ``ClusterState.cfg``.
+
+    ``storage`` overrides the factor storage layout: "packed" keeps every
+    Cholesky factor as a :class:`~repro.sparse.packed.PackedBlocks` stack
+    in the symbolic fill-mask layout (O(S·nnz_blocks) device memory),
+    "dense" keeps (S, n, n) stacks. ``None`` defers to ``cfg.storage``
+    (or, with ``cfg="auto"``, lets the autotuner choose per pattern). The
+    unregularized K kept for the lumped preconditioner is ALWAYS packed —
+    no dense (S, n, n) K survives preprocessing in either mode.
 
     Pass ``mesh`` (``("data",)`` axis, :func:`repro.launch.mesh.
     make_feti_mesh`) to shard the subdomain axis over devices: multipliers
@@ -297,16 +359,19 @@ def preprocess_cluster(
     n = subs[0].n
     static, prep = make_cluster_preprocessor(
         problem, cfg, explicit, ordering, measure=measure,
-        plan_cache=plan_cache, mesh=mesh)
-    cfg = static["cfg"]  # resolved when "auto" was passed
+        plan_cache=plan_cache, mesh=mesh, storage=storage)
+    cfg = static["cfg"]  # resolved when "auto"/storage override was passed
     node_perm = static["node_perm"]
+    index: PackedBlockIndex = static["index"]
 
     Kreg = np.stack(
         [fixing_node_regularization(sd.K, sd.fixing_node) for sd in subs]
     )
     Kp = Kreg[:, node_perm][:, :, node_perm]
     Btp = np.stack([sd.Bt[node_perm] for sd in subs])
-    K_orig = np.stack([sd.K for sd in subs])
+    # the lumped preconditioner's K: unregularized, permuted like the
+    # factor so it shares Btp — packed host-side into the fill-mask layout
+    K_perm = np.stack([sd.K for sd in subs])[:, node_perm][:, :, node_perm]
     f = np.stack([sd.f for sd in subs])
     lam = np.stack([sd.lambda_ids for sd in subs])
 
@@ -327,7 +392,7 @@ def preprocess_cluster(
         S_pad = shlib.padded_count(S, mesh)
         Kp = shlib.pad_stack(Kp, S_pad, identity=True)
         Btp = shlib.pad_stack(Btp, S_pad)
-        K_orig = shlib.pad_stack(K_orig, S_pad)
+        K_perm = shlib.pad_stack(K_perm, S_pad)
         f = shlib.pad_stack(f, S_pad)
         pad_ids = np.full((S_pad - S, lam.shape[1]), problem.n_lambda,
                           lam.dtype)
@@ -340,6 +405,10 @@ def preprocess_cluster(
     Btp_j = to_dev(Btp)
     L, F = prep(Kp_j, Btp_j)
 
+    # pack K host-side (numpy blocks), then place/shard only the values
+    K_vals = np.asarray(index.pack(jnp.asarray(K_perm, dtype=dtype)))
+    K_packed = PackedBlocks(to_dev(K_vals), index)
+
     r_norm = to_dev(np.full((S_pad,), 1.0 / np.sqrt(n)))
     f_j = to_dev(f)
     fp_j = to_dev(f[:, node_perm])
@@ -350,9 +419,10 @@ def preprocess_cluster(
         env=static["env"],
         block_mask=static["block_mask"],
         node_perm=node_perm,
+        index=index,
         L=L,
         Btp=Btp_j,
-        K=to_dev(K_orig),
+        K=K_packed,
         F=F,
         f=f_j,
         fp=fp_j,

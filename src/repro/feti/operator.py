@@ -9,11 +9,22 @@ of the paper's MPI neighbour exchange. These batched implementations are
 also the per-shard bodies of the distributed deployment: under shard_map
 the scatter lands in a device-local partial and becomes a psum over the
 subdomain-sharded axis (see :mod:`repro.feti.sharded`).
+
+Factor stacks may be dense ``(S, n, n)`` arrays or packed block-sparse
+:class:`~repro.sparse.packed.PackedBlocks` stacks (``storage="packed"`` in
+:class:`~repro.core.SchurAssemblyConfig`); :func:`solve_with_factor`
+dispatches per representation so every operator below is storage-agnostic.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.sparse.packed import (
+    PackedBlocks,
+    packed_symm_matvec,
+    packed_tri_solve,
+)
 
 __all__ = [
     "gather_local",
@@ -22,6 +33,8 @@ __all__ = [
     "implicit_dual_apply",
     "lumped_preconditioner",
     "dual_rhs",
+    "solve_with_factor",
+    "apply_stiffness",
 ]
 
 
@@ -51,31 +64,58 @@ def _tri_solve(L, b, transpose):
     )[..., 0]
 
 
-def implicit_dual_apply(L: jax.Array, Btp: jax.Array, lambda_ids: jax.Array,
+def solve_with_factor(L, b: jax.Array) -> jax.Array:
+    """Apply (L Lᵀ)⁻¹ to a subdomain-stacked (S, n) right-hand side.
+
+    The one forward/backward triangular-solve pair every consumer of the
+    factor shares (implicit dual operator, dual RHS, solution recovery).
+    ``L`` is either a dense (S, n, n) stack or a packed
+    :class:`~repro.sparse.packed.PackedBlocks` stack — same semantics.
+    """
+    if isinstance(L, PackedBlocks):
+        fwd = jax.vmap(packed_tri_solve, in_axes=(0, 0, None))
+        return fwd(L, fwd(L, b, False), True)
+    t = jax.vmap(_tri_solve, in_axes=(0, 0, None))(L, b, False)
+    return jax.vmap(_tri_solve, in_axes=(0, 0, None))(L, t, True)
+
+
+def apply_stiffness(K, v: jax.Array) -> jax.Array:
+    """Batched ``Kᵢ vᵢ`` for a stiffness stack stored dense or packed
+    (packed = the symmetric lower block triangle in fill-mask layout)."""
+    if isinstance(K, PackedBlocks):
+        return jax.vmap(packed_symm_matvec)(K, v)
+    return jnp.einsum("snk,sk->sn", K, v)
+
+
+def implicit_dual_apply(L, Btp: jax.Array, lambda_ids: jax.Array,
                         n_lambda: int, lam: jax.Array) -> jax.Array:
     """q = Σᵢ scatter( B̃ᵢ L⁻ᵀL⁻¹ B̃ᵢᵀ gather(λ) )  (paper eq. 11)."""
     p_loc = gather_local(lam, lambda_ids)
     v = jnp.einsum("snm,sm->sn", Btp, p_loc)
-    t = jax.vmap(_tri_solve, in_axes=(0, 0, None))(L, v, False)
-    t = jax.vmap(_tri_solve, in_axes=(0, 0, None))(L, t, True)
+    t = solve_with_factor(L, v)
     q_loc = jnp.einsum("snm,sn->sm", Btp, t)
     return scatter_dual(q_loc, lambda_ids, n_lambda)
 
 
-def lumped_preconditioner(K: jax.Array, Bt: jax.Array, lambda_ids: jax.Array,
+def lumped_preconditioner(K, Bt: jax.Array, lambda_ids: jax.Array,
                           n_lambda: int, w: jax.Array) -> jax.Array:
-    """Lumped FETI preconditioner: M⁻¹ ≈ Σᵢ B̃ᵢ Kᵢ B̃ᵢᵀ."""
+    """Lumped FETI preconditioner: M⁻¹ ≈ Σᵢ B̃ᵢ Kᵢ B̃ᵢᵀ.
+
+    ``K`` is the unregularized stiffness stack — dense, or packed in the
+    factor's block layout (the form :func:`repro.feti.assembly.
+    preprocess_cluster` stores: no dense (S, n, n) K survives preprocessing).
+    ``Bt`` must share K's row order (the factor order when K is packed).
+    """
     p_loc = gather_local(w, lambda_ids)
     v = jnp.einsum("snm,sm->sn", Bt, p_loc)
-    v = jnp.einsum("snk,sk->sn", K, v)
+    v = apply_stiffness(K, v)
     q_loc = jnp.einsum("snm,sn->sm", Bt, v)
     return scatter_dual(q_loc, lambda_ids, n_lambda)
 
 
-def dual_rhs(L: jax.Array, Btp: jax.Array, fp: jax.Array,
+def dual_rhs(L, Btp: jax.Array, fp: jax.Array,
              lambda_ids: jax.Array, n_lambda: int, c: jax.Array) -> jax.Array:
     """d = B K⁺ f − c (paper §2.1)."""
-    t = jax.vmap(_tri_solve, in_axes=(0, 0, None))(L, fp, False)
-    t = jax.vmap(_tri_solve, in_axes=(0, 0, None))(L, t, True)
+    t = solve_with_factor(L, fp)
     q_loc = jnp.einsum("snm,sn->sm", Btp, t)
     return scatter_dual(q_loc, lambda_ids, n_lambda) - c

@@ -218,7 +218,7 @@ def dual_rhs(
     """d = B K⁺ f − c; the B-scatter is psum'd, c subtracted once outside."""
 
     def body(L_l, B_l, f_l, ids_l):
-        zero_c = jnp.zeros((n_lambda,), L_l.dtype)
+        zero_c = jnp.zeros((n_lambda,), B_l.dtype)
         q = op.dual_rhs(L_l, B_l, f_l, ids_l, n_lambda, zero_c)
         return jax.lax.psum(q, AXIS)
 

@@ -30,6 +30,7 @@ from repro.feti.operator import (
     gather_local,
     implicit_dual_apply,
     lumped_preconditioner,
+    solve_with_factor,
 )
 from repro.feti.pcpg import PCPGResult, pcpg
 from repro.feti.projector import build_coarse_problem
@@ -64,12 +65,18 @@ class FetiSolver:
         measure: str = "auto",
         plan_cache: bool = True,
         mesh=None,
+        storage: Optional[str] = None,
     ):
         """``cfg`` may also be the string ``"auto"``: the assembly plan is
         then chosen by the autotuner during :meth:`preprocess` (see
         :mod:`repro.core.autotune`) and ``self.cfg``/``self.plan`` carry
         the resolved config and its cost report afterwards. ``measure``
         and ``plan_cache`` tune that search and are ignored otherwise.
+
+        ``storage`` ("dense" | "packed" | None) overrides the factor
+        storage layout (see :func:`repro.feti.assembly.preprocess_cluster`);
+        with ``cfg="auto"`` it restricts the autotuner's search to that
+        layout, and ``None`` lets the tuner choose.
 
         ``mesh`` (a ``("data",)`` device mesh, see
         :func:`repro.launch.mesh.make_feti_mesh`) shards the subdomain
@@ -89,6 +96,7 @@ class FetiSolver:
         self.measure = measure
         self.plan_cache = plan_cache
         self.mesh = mesh
+        self.storage = storage
         self.state: Optional[ClusterState] = None
         self.timings: dict = {}
 
@@ -104,6 +112,7 @@ class FetiSolver:
             measure=self.measure,
             plan_cache=self.plan_cache,
             mesh=self.mesh,
+            storage=self.storage,
         )
         jax.block_until_ready(self.state.L)
         if self.state.F is not None:
@@ -134,7 +143,9 @@ class FetiSolver:
             else:
                 apply_F = partial(implicit_dual_apply, st.L, st.Btp,
                                   st.lambda_ids, nl)
-            precond_args = (st.K, Bt_orig, st.lambda_ids, nl)
+            # K is packed in factor row order, so it pairs with Btp (the
+            # product B̃ K B̃ᵀ is invariant to the shared row permutation)
+            precond_args = (st.K, st.Btp, st.lambda_ids, nl)
             precond_fn = lumped_preconditioner
             d = dual_rhs(st.L, st.Btp, st.fp, st.lambda_ids, nl, c)
         else:
@@ -156,7 +167,7 @@ class FetiSolver:
             else:
                 apply_F = partial(shlib.implicit_dual_apply, st.mesh, st.L,
                                   st.Btp, st.lambda_ids, nl)
-            precond_args = (st.mesh, st.K, Bt_orig, st.lambda_ids, nl)
+            precond_args = (st.mesh, st.K, st.Btp, st.lambda_ids, nl)
             precond_fn = shlib.lumped_preconditioner
             d = shlib.dual_rhs(st.mesh, st.L, st.Btp, st.fp, st.lambda_ids,
                                nl, c)
@@ -187,16 +198,7 @@ class FetiSolver:
         alpha = coarse.alpha(Flam - d)
         lam_loc = gather_local(res.lam, st.lambda_ids)
         rhs = st.fp - jnp.einsum("snm,sm->sn", st.Btp, lam_loc)
-        t = jax.vmap(
-            lambda L, b: jax.lax.linalg.triangular_solve(
-                L, b[:, None], left_side=True, lower=True
-            )[:, 0]
-        )(st.L, rhs)
-        up = jax.vmap(
-            lambda L, b: jax.lax.linalg.triangular_solve(
-                L, b[:, None], left_side=True, lower=True, transpose_a=True
-            )[:, 0]
-        )(st.L, t)
+        up = solve_with_factor(st.L, rhs)
         # back to original node order + rigid body (constant) correction;
         # drop any inert mesh-padding subdomains (S_real == S unsharded)
         inv_perm = np.argsort(st.node_perm)

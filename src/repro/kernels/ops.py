@@ -16,9 +16,17 @@ import numpy as np
 
 from repro.core.stepped import SteppedMeta
 from repro.kernels.stepped_syrk import stepped_syrk_pallas
-from repro.kernels.stepped_trsm import stepped_trsm_pallas
+from repro.kernels.stepped_trsm import (
+    stepped_trsm_packed_pallas,
+    stepped_trsm_pallas,
+)
 
-__all__ = ["stepped_trsm", "stepped_syrk", "invert_diag_blocks"]
+__all__ = [
+    "stepped_trsm",
+    "stepped_trsm_packed",
+    "stepped_syrk",
+    "invert_diag_blocks",
+]
 
 
 def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
@@ -74,6 +82,45 @@ def stepped_trsm(L: jax.Array, B: jax.Array, meta: SteppedMeta,
     Linv = invert_diag_blocks(Lp, bs)
     Y = stepped_trsm_pallas(Linv, Lp, Bp, starts, bs=bs, bm=bm,
                             interpret=interpret)
+    return Y[:n, :m]
+
+
+def stepped_trsm_packed(L, B: jax.Array, meta: SteppedMeta,
+                        interpret: bool = False) -> jax.Array:
+    """Pallas stepped TRSM against a PACKED factor (repro.sparse.packed).
+
+    ``L`` is a :class:`~repro.sparse.packed.PackedBlocks` whose index was
+    built at the same block size as ``meta``; only the stored factor blocks
+    are shipped to the kernel (plus the CSR block index in SMEM), so VMEM
+    holds O(nnz_blocks·bs²) instead of the padded dense factor.
+    """
+    from repro.sparse.packed import PackedBlocks
+
+    if not isinstance(L, PackedBlocks):
+        raise TypeError("stepped_trsm_packed expects a PackedBlocks factor, "
+                        f"got {type(L).__name__}")
+    index = L.index
+    bs, bm = meta.block_size, meta.rhs_block_size
+    n, m = meta.n, meta.m
+    if (index.bs, index.n) != (bs, n):
+        raise ValueError(
+            f"packed index (n={index.n}, bs={index.bs}) does not match "
+            f"stepped meta (n={n}, bs={bs})")
+    n_pad = index.n_pad
+    m_pad = -(-m // bm) * bm
+    Bp = _pad_to(B, n_pad, m_pad)
+    starts = jnp.asarray(_start_blocks(meta, bm, bs, m_pad, n_pad))
+    # diagonal blocks are identity-padded by construction (pack_factor /
+    # block_cholesky_packed), so they are always triangular-invertible
+    diag = L.values[index.diag_slots]
+    eye = jnp.broadcast_to(jnp.eye(bs, dtype=diag.dtype),
+                           (index.nb, bs, bs))
+    Linv = jax.lax.linalg.triangular_solve(diag, eye, left_side=True,
+                                           lower=True)
+    Y = stepped_trsm_packed_pallas(
+        Linv, L.values,
+        jnp.asarray(index.rowptr), jnp.asarray(index.cols),
+        Bp, starts, bs=bs, bm=bm, interpret=interpret)
     return Y[:n, :m]
 
 

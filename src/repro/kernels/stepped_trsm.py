@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["stepped_trsm_pallas"]
+__all__ = ["stepped_trsm_pallas", "stepped_trsm_packed_pallas"]
 
 
 def _acc_dtype(dtype):
@@ -95,3 +95,85 @@ def stepped_trsm_pallas(
         out_shape=jax.ShapeDtypeStruct((n, m), B.dtype),
         interpret=interpret,
     )(start_block, Linv_diag, L, B)
+
+
+def _trsm_packed_kernel(meta_ref, rowptr_ref, colidx_ref, linv_ref, vals_ref,
+                        b_ref, out_ref, *, bs: int, nb: int):
+    """Packed-factor stepped TRSM: the factor arrives as the packed
+    (n_blocks, bs, bs) value stack plus its CSR-style (rowptr, colidx) block
+    index in SMEM. The inner loop walks ONLY the stored subdiagonal blocks
+    of row k (the diagonal slot is last in each row and is applied via its
+    pre-inverted twin), so the paper's zero-block pruning is structural:
+    absent blocks are never even addressed. Y blocks above the stripe's
+    ``start`` stay zero, so stored blocks left of ``start`` contribute
+    exact zeros — no masking needed."""
+    c = pl.program_id(0)
+    start = meta_ref[c]
+    acc_t = _acc_dtype(out_ref.dtype)
+
+    out_ref[...] = jnp.zeros_like(out_ref)
+
+    def outer(k, _):
+        rk = pl.ds(k * bs, bs)
+        acc = b_ref[rk, :].astype(acc_t)
+        t0 = rowptr_ref[k]
+        t1 = rowptr_ref[k + 1] - 1  # last slot of the row is the diagonal
+
+        def inner(t, acc):
+            j = colidx_ref[t]
+            yj = out_ref[pl.ds(j * bs, bs), :]
+            return acc - jnp.dot(vals_ref[t], yj, preferred_element_type=acc_t)
+
+        acc = jax.lax.fori_loop(t0, t1, inner, acc)
+        yk = jnp.dot(linv_ref[k], acc, preferred_element_type=acc_t)
+        out_ref[rk, :] = yk.astype(out_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(start, nb, outer, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bm", "interpret"))
+def stepped_trsm_packed_pallas(
+    Linv_diag: jax.Array,  # (nb, bs, bs) pre-inverted diagonal blocks
+    values: jax.Array,  # (n_blocks, bs, bs) packed factor blocks
+    rowptr: jax.Array,  # (nb + 1,) int32 CSR row pointers (diag last in row)
+    colidx: jax.Array,  # (n_blocks,) int32 block-column of each slot
+    B: jax.Array,  # (n, m) stepped RHS (padded to block multiples)
+    start_block: jax.Array,  # (m // bm,) int32: first factor block per stripe
+    bs: int,
+    bm: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed variant of :func:`stepped_trsm_pallas`: VMEM holds the
+    O(nnz_blocks·bs²) value stack instead of the dense (n, n) factor — the
+    capacity win that lets bigger subdomains fit on one core."""
+    n, m = B.shape
+    if n % bs or m % bm:
+        raise ValueError("inputs must be padded to block multiples (see ops.py)")
+    nb, nc = n // bs, m // bm
+    n_blocks = values.shape[0]
+    if Linv_diag.shape != (nb, bs, bs):
+        raise ValueError(f"Linv_diag shape {Linv_diag.shape} != {(nb, bs, bs)}")
+    if values.shape != (n_blocks, bs, bs):
+        raise ValueError(f"values shape {values.shape} != {(n_blocks, bs, bs)}")
+    if rowptr.shape != (nb + 1,) or colidx.shape != (n_blocks,):
+        raise ValueError("rowptr/colidx shapes do not match the block index")
+    if start_block.shape != (nc,):
+        raise ValueError(f"start_block shape {start_block.shape} != {(nc,)}")
+
+    kernel = functools.partial(_trsm_packed_kernel, bs=bs, nb=nb)
+    return pl.pallas_call(
+        kernel,
+        grid=(nc,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # start_block
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # rowptr
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # colidx
+            pl.BlockSpec((nb, bs, bs), lambda c: (0, 0, 0)),  # Linv_diag
+            pl.BlockSpec((n_blocks, bs, bs), lambda c: (0, 0, 0)),  # values
+            pl.BlockSpec((n, bm), lambda c: (0, c)),  # B stripe
+        ],
+        out_specs=pl.BlockSpec((n, bm), lambda c: (0, c)),
+        out_shape=jax.ShapeDtypeStruct((n, m), B.dtype),
+        interpret=interpret,
+    )(start_block, rowptr, colidx, Linv_diag, values, B)

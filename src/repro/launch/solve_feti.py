@@ -37,6 +37,12 @@ def main(argv=None) -> int:
                         "with --devices, against a single-device solve)")
     p.add_argument("--autotune", action="store_true",
                    help="let the plan autotuner pick the assembly config")
+    p.add_argument("--storage", choices=("dense", "packed"), default=None,
+                   help="factor storage layout: dense (S,n,n) stacks or "
+                        "packed block-sparse stacks in the symbolic "
+                        "fill-mask layout (docs/packed_storage.md); "
+                        "default: the config's choice, or the autotuner's "
+                        "with --autotune")
     p.add_argument("--no-plan-cache", action="store_true",
                    help="ignore + don't write the on-disk plan cache")
     p.add_argument("--devices", type=int, default=0, metavar="N",
@@ -89,8 +95,16 @@ def main(argv=None) -> int:
             block_size=fc.block_size, rhs_block_size=fc.rhs_block_size,
         )
     solver = FetiSolver(prob, cfg, mode=args.mode,
-                        plan_cache=not args.no_plan_cache, mesh=mesh)
+                        plan_cache=not args.no_plan_cache, mesh=mesh,
+                        storage=args.storage)
     sol = solver.solve(tol=args.tol)
+
+    st = solver.state
+    if st is not None:
+        by = st.device_bytes()
+        print(f"[feti] storage={st.storage} device bytes: "
+              f"L={by['L']:,} K={by['K']:,} Btp={by['Btp']:,} "
+              f"F={by['F']:,} (dense L would be {by['dense_L']:,})")
 
     if args.autotune and solver.plan is not None:
         for line in solver.plan.summary().splitlines():
@@ -99,9 +113,11 @@ def main(argv=None) -> int:
             import jax.numpy as jnp
 
             from repro.core import schur_dense_baseline
+            from repro.sparse import PackedBlocks
 
             st = solver.state
-            F_ref = jax.vmap(schur_dense_baseline)(st.L, st.Btp)
+            L_ref = st.L.unpack() if isinstance(st.L, PackedBlocks) else st.L
+            F_ref = jax.vmap(schur_dense_baseline)(L_ref, st.Btp)
             err = float(jnp.max(jnp.abs(st.F - F_ref)))
             print(f"[autotune] max |F_auto - F_dense_baseline| = {err:.2e}")
             if err > 1e-8:

@@ -4,6 +4,15 @@ block factorization (block elimination tree / fill mask), and the blocked
 numerical Cholesky in JAX whose tiles are born MXU-aligned."""
 from repro.sparse.cholesky import block_cholesky, block_cholesky_flops
 from repro.sparse.ordering import nested_dissection_order, rcm_order
+from repro.sparse.packed import (
+    PackedBlockIndex,
+    PackedBlocks,
+    block_cholesky_packed,
+    pack_factor,
+    packed_block_index_for,
+    packed_symm_matvec,
+    packed_tri_solve,
+)
 from repro.sparse.symbolic import (
     block_pattern,
     block_symbolic_cholesky,
@@ -11,11 +20,18 @@ from repro.sparse.symbolic import (
 )
 
 __all__ = [
+    "PackedBlockIndex",
+    "PackedBlocks",
     "block_cholesky",
     "block_cholesky_flops",
+    "block_cholesky_packed",
     "block_pattern",
     "block_symbolic_cholesky",
     "matrix_pattern_from_elems",
     "nested_dissection_order",
+    "pack_factor",
+    "packed_block_index_for",
+    "packed_symm_matvec",
+    "packed_tri_solve",
     "rcm_order",
 ]

@@ -63,18 +63,27 @@ def test_enumerate_space_canonical():
     space = enumerate_space([16, 32])
     # no structural duplicates
     assert len(space) == len(set(space))
-    # prune only toggles for factor_split, pallas never pairs dense/dense
+    # prune only toggles for factor_split, pallas never pairs dense/dense,
+    # and packed storage only appears where it is native (factor_split)
     for cfg in space:
         if cfg.trsm_variant != "factor_split":
             assert not cfg.prune
         if cfg.use_pallas:
             assert not (cfg.trsm_variant == "dense"
                         and cfg.syrk_variant == "dense")
-    # per block size: 12 non-pallas (9 combos + 3 extra prunes) + 8 pallas
-    assert len(space) == 2 * (12 + 8)
+        if cfg.storage == "packed":
+            assert cfg.trsm_variant == "factor_split"
+    # per block size: 12 dense non-pallas (9 combos + 3 extra prunes)
+    # + 8 dense pallas + 3 packed factor_split + 3 packed pallas
+    assert len(space) == 2 * (12 + 8 + 3 + 3)
     # every variant pair is represented
     pairs = {(c.trsm_variant, c.syrk_variant) for c in space}
     assert len(pairs) == 9
+    # storage restriction prunes the space to one layout
+    assert all(c.storage == "packed" for c in
+               enumerate_space([16], storage="packed"))
+    assert all(c.storage == "dense" for c in
+               enumerate_space([16], storage="dense"))
 
 
 def test_default_block_sizes_clip_to_problem():
@@ -88,7 +97,10 @@ def test_default_block_sizes_clip_to_problem():
 def test_cost_model_positive_and_dense_single_op():
     pat = _pattern()
     meta = build_stepped_meta(pat, block_size=16)
-    dense = SchurAssemblyConfig("dense", "dense", 16, prune=False)
+    # storage is pinned: this asserts the DENSE baseline's launch count
+    # (under the packed-default CI lane the env would flip it otherwise)
+    dense = SchurAssemblyConfig("dense", "dense", 16, prune=False,
+                                storage="dense")
     by = assembly_bytes(meta, dense)
     assert by["ops"] == 2  # one TRSM + one SYRK launch
     assert by["total"] > 0

@@ -291,13 +291,12 @@ def test_sharded_dual_operators_match(prob, mesh, single, sharded_state):
         atol=1e-10,
     )
 
-    Bt1 = jnp.asarray(_bt_stack(prob))
-    w1 = lumped_preconditioner(st1.K, Bt1, st1.lambda_ids, nl, lam)
-    Bt_sh = _relabeled_padded_bt(prob, st1, st_sh, mesh)
+    # K is packed in factor row order and pairs with Btp (feti.assembly)
+    w1 = lumped_preconditioner(st1.K, st1.Btp, st1.lambda_ids, nl, lam)
     w_sh = shlib.lumped_preconditioner(
         mesh,
         st_sh.K,
-        Bt_sh,
+        st_sh.Btp,
         st_sh.lambda_ids,
         nl,
         lam,
