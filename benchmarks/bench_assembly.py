@@ -22,18 +22,24 @@ from repro.sparse.cholesky import block_cholesky, block_cholesky_flops
 from benchmarks.common import device_bytes, emit, subdomain_problem, time_fn
 
 
-def run(sizes_2d=(16, 24), sizes_3d=(6, 9), bs: int = 32,
-        reps: int = 3) -> list[tuple]:
+def run(sizes_2d=(16, 24), sizes_3d=(6, 9), ela_2d=(12, 16), ela_3d=(4, 6),
+        bs: int = 32, reps: int = 3) -> list[tuple]:
     rows = []
-    for dim, sizes in ((2, sizes_2d), (3, sizes_3d)):
+    cases = [("heat", 2, sizes_2d), ("heat", 3, sizes_3d),
+             # elasticity: same node grids are 2-3x the DOFs (node-blocked),
+             # so the block-size ↔ DOFs-per-node interplay shows up in the
+             # same table at comparable n
+             ("elasticity", 2, ela_2d), ("elasticity", 3, ela_3d)]
+    for problem, dim, sizes in cases:
         for e in sizes:
-            prob = subdomain_problem(dim, e, bs)
+            prob = subdomain_problem(dim, e, bs, problem=problem)
             K = jnp.asarray(prob["K"])
             L = jnp.asarray(prob["L"])
             Bt = jnp.asarray(prob["Bt"])
             meta, mask = prob["meta"], prob["mask"]
             n = prob["n"]
-            tag = f"{dim}d/n{n}"
+            tag = (f"{dim}d/n{n}" if problem == "heat"
+                   else f"{dim}d-ela/n{n}")
             # storage pinned: these rows ARE the dense-stored reference the
             # packed rows below compare against (REPRO_STORAGE must not
             # flip them under the CI packed lane)

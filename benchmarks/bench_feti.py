@@ -16,21 +16,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import SchurAssemblyConfig
-from repro.fem import decompose_heat_problem
+from repro.fem import decompose_problem
 from repro.feti import FetiSolver
 from repro.feti.assembly import preprocess_cluster
 from repro.feti.operator import explicit_dual_apply, implicit_dual_apply
 from benchmarks.common import emit, fmt_bytes, time_fn
 
 
-def run(cases=((2, (2, 2), (8, 8)), (2, (2, 2), (16, 16)),
-               (3, (2, 2, 1), (4, 4, 4)), (3, (2, 2, 1), (6, 6, 6))),
+def run(cases=(("heat", 2, (2, 2), (8, 8)), ("heat", 2, (2, 2), (16, 16)),
+               ("heat", 3, (2, 2, 1), (4, 4, 4)),
+               ("heat", 3, (2, 2, 1), (6, 6, 6)),
+               # elasticity: 2-3 DOFs/node, kernel dim 3/6 — heat-vs-
+               # elasticity preprocessing cost at comparable DOF counts
+               ("elasticity", 2, (2, 2), (8, 8)),
+               ("elasticity", 3, (2, 2, 1), (3, 3, 3))),
         bs: int = 16, reps: int = 3) -> list[tuple]:
     rows = []
-    for dim, grid, eps in cases:
-        prob = decompose_heat_problem(dim, grid, eps)
+    for problem, dim, grid, eps in cases:
+        prob = decompose_problem(problem, dim, grid, eps)
         n = prob.subdomains[0].n
-        tag = f"{dim}d/n{n}"
+        tag = f"{dim}d/n{n}" if problem == "heat" else f"{dim}d-ela/n{n}"
         # storage pinned to dense: these are the dense-stored references
         # the preproc_expl_packed row compares against (REPRO_STORAGE must
         # not flip them under the CI packed lane)
@@ -44,7 +49,7 @@ def run(cases=((2, (2, 2), (8, 8)), (2, (2, 2), (16, 16)),
         import numpy as np
 
         from repro.feti.assembly import make_cluster_preprocessor
-        from repro.fem.regularization import fixing_node_regularization
+        from repro.fem.regularization import fixing_dofs_regularization
 
         def preprocess_time(cfg, explicit):
             """Time the COMPILED preprocessing (pattern fixed, values new —
@@ -53,7 +58,7 @@ def run(cases=((2, (2, 2), (8, 8)), (2, (2, 2), (16, 16)),
                                                      explicit=explicit)
             np_ = static["node_perm"]
             Kp = np.stack([
-                fixing_node_regularization(sd.K, sd.fixing_node)[np_][:, np_]
+                fixing_dofs_regularization(sd.K, sd.fixing_dofs)[np_][:, np_]
                 for sd in prob.subdomains
             ])
             Btp = np.stack([sd.Bt[np_] for sd in prob.subdomains])

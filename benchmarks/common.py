@@ -20,10 +20,13 @@ import numpy as np
 from repro.core import build_stepped_meta
 from repro.fem import (
     assemble_dense,
+    element_dofs,
+    p1_elasticity_stiffness,
     p1_element_stiffness,
     structured_mesh,
 )
-from repro.fem.regularization import fixing_node_regularization
+from repro.fem.decomposition import _fixing_dofs
+from repro.fem.regularization import fixing_dofs_regularization
 from repro.sparse import (
     PackedBlockIndex,
     PackedBlocks,
@@ -79,33 +82,58 @@ def time_fn(fn: Callable, *args, reps: int = 5, warmup: int = 1) -> float:
 
 
 def subdomain_problem(dim: int, elems_per_axis: int, block_size: int,
-                      rhs_block_size: int | None = None, seed: int = 0):
+                      rhs_block_size: int | None = None, seed: int = 0,
+                      problem: str = "heat"):
     """One FETI-like subdomain: K_reg (ND-permuted), its factor L, B̃ᵀ in
-    factor row order, stepped metadata, and the symbolic block mask."""
+    factor row order, stepped metadata, and the symbolic block mask.
+
+    ``problem="elasticity"`` builds the node-blocked vector-DOF subdomain
+    (2-3 DOFs per node, rigid-body kernel): same node ordering, DOF perm
+    and pattern expanded per node block — the block-size ↔ DOFs-per-node
+    interplay the elasticity bench rows measure.
+    """
+    from repro.feti.assembly import expand_node_pattern, expand_node_perm
+
     shape = (elems_per_axis,) * dim
     mesh = structured_mesh(shape)
-    n = mesh.n_nodes
-    Ke = p1_element_stiffness(mesh.coords, mesh.elems)
-    K = np.asarray(assemble_dense(mesh.n_nodes, mesh.elems, Ke))
-    K = fixing_node_regularization(K, fixing_node=n // 2)
+    ndpn = 1 if problem == "heat" else dim
+    n = mesh.n_nodes * ndpn
     node_shape = tuple(s + 1 for s in shape)
-    perm = nested_dissection_order(node_shape)
+    lstrides = [1]
+    for d in range(dim - 1):
+        lstrides.append(lstrides[-1] * node_shape[d])
+    if problem == "heat":
+        Ke = p1_element_stiffness(mesh.coords, mesh.elems)
+        edofs = mesh.elems
+    else:
+        Ke = p1_elasticity_stiffness(mesh.coords, mesh.elems)
+        edofs = element_dofs(mesh.elems, dim)
+    # heat: the center fixing node; elasticity: the same 3-2-1 fixture
+    # the decomposition places (shared helper — layouts can't diverge)
+    fix = _fixing_dofs(problem, dim, node_shape, lstrides,
+                       fixing_node=mesh.n_nodes // 2)
+    K = np.asarray(assemble_dense(n, edofs, Ke))
+    K = fixing_dofs_regularization(K, fix)
+    perm = expand_node_perm(nested_dissection_order(node_shape), ndpn)
     Kp = K[perm][:, perm]
-    pat = matrix_pattern_from_elems(n, mesh.elems)[perm][:, perm]
+    pat = expand_node_pattern(
+        matrix_pattern_from_elems(mesh.n_nodes, mesh.elems), ndpn)
+    pat = pat[perm][:, perm]
     mask = block_symbolic_cholesky(block_pattern(pat, block_size))
     L = np.asarray(block_cholesky(jax.numpy.asarray(Kp), block_size, mask=mask))
 
-    # surface multipliers: ~one per boundary node (FETI-like density)
+    # surface multipliers: ~one per boundary DOF (FETI-like density)
     rng = np.random.default_rng(seed)
     # boundary nodes of the box
     grid = np.meshgrid(*[np.arange(s + 1) for s in shape], indexing="ij")
     idx = np.stack([g.ravel(order="F") for g in grid], axis=1)
     on_surf = np.any((idx == 0) | (idx == np.array(shape)), axis=1)
     surf = np.flatnonzero(on_surf)
+    surf_dofs = (surf[:, None] * ndpn + np.arange(ndpn)).reshape(-1)
     # map to permuted row ids
     inv = np.empty(n, np.int64)
     inv[perm] = np.arange(n)
-    rows = inv[surf]
+    rows = inv[surf_dofs]
     m = len(rows)
     Bt = np.zeros((n, m))
     Bt[rows, np.arange(m)] = rng.choice([-1.0, 1.0], m)

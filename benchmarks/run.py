@@ -42,9 +42,12 @@ DRY_OVERRIDES = {
                              block_sizes=(8, 16), reps=1),
     "bench_variants": dict(sizes_2d=(8,), sizes_3d=(4,), bs=8, reps=1),
     "bench_kernels": dict(sizes_2d=(8,), sizes_3d=(4,), bs=8, reps=1),
-    "bench_assembly": dict(sizes_2d=(8,), sizes_3d=(4,), bs=8, reps=1),
+    "bench_assembly": dict(sizes_2d=(8,), sizes_3d=(4,), ela_2d=(6,),
+                           ela_3d=(3,), bs=8, reps=1),
     "bench_autotune": dict(sizes_2d=(8,), sizes_3d=(4,), bs=8, reps=1),
-    "bench_feti": dict(cases=((2, (2, 2), (4, 4)),), bs=8, reps=1),
+    "bench_feti": dict(cases=(("heat", 2, (2, 2), (4, 4)),
+                              ("elasticity", 2, (2, 2), (3, 3))),
+                       bs=8, reps=1),
     "bench_sharded": dict(dim=2, sub_grid=(2, 2), elems_per_sub=(4, 4),
                           bs=8, reps=1),
     "bench_lm": dict(reps=1),

@@ -30,12 +30,18 @@ ARCH_MODULES = [
     "hubert_xlarge",
     "feti_heat_2d",
     "feti_heat_3d",
+    "feti_elasticity_2d",
+    "feti_elasticity_3d",
 ]
 
 
 @dataclasses.dataclass(frozen=True)
 class FetiArchConfig:
-    """The paper's own 'architecture': a FETI heat-transfer problem."""
+    """The paper's own 'architecture': a structured FETI problem.
+
+    ``problem`` selects the workload: scalar "heat" (1 DOF/node, kernel
+    dim 1) or vector "elasticity" (2-3 DOFs/node, rigid-body kernel dim
+    3/6 — the paper's target engineering setting)."""
 
     name: str
     dim: int
@@ -45,6 +51,7 @@ class FetiArchConfig:
     rhs_block_size: int = 128
     trsm_variant: str = "factor_split"
     syrk_variant: str = "input_split"
+    problem: str = "heat"
     family: str = "feti"
 
 

@@ -1,19 +1,31 @@
-"""FEM substrate: structured heat-transfer meshes (paper §4's benchmark
-problem), P1 stiffness assembly, and the total-FETI domain decomposition
-(subdomains, gluing matrices B, Dirichlet constraints)."""
+"""FEM substrate: structured meshes (paper §4's benchmark geometry), P1
+stiffness assembly for scalar heat and vector linear elasticity, and the
+total-FETI domain decomposition (subdomains, gluing matrices B, Dirichlet
+constraints, kernel bases + fixing-DOF regularization)."""
 from repro.fem.assembly import (
     assemble_dense,
     assemble_scipy_csr,
+    elasticity_load_vector,
+    elasticity_matrix,
+    element_dofs,
     load_vector,
+    p1_elasticity_stiffness,
     p1_element_stiffness,
 )
 from repro.fem.decomposition import (
     FetiProblem,
     SubdomainData,
+    decompose_elasticity_problem,
     decompose_heat_problem,
+    decompose_problem,
 )
 from repro.fem.meshgen import Mesh, structured_mesh
-from repro.fem.regularization import fixing_node_regularization, kernel_basis
+from repro.fem.regularization import (
+    fixing_dofs_regularization,
+    fixing_node_regularization,
+    kernel_basis,
+    rigid_body_modes,
+)
 
 __all__ = [
     "FetiProblem",
@@ -21,10 +33,18 @@ __all__ = [
     "SubdomainData",
     "assemble_dense",
     "assemble_scipy_csr",
+    "decompose_elasticity_problem",
     "decompose_heat_problem",
+    "decompose_problem",
+    "elasticity_load_vector",
+    "elasticity_matrix",
+    "element_dofs",
+    "fixing_dofs_regularization",
     "fixing_node_regularization",
     "kernel_basis",
     "load_vector",
+    "p1_elasticity_stiffness",
     "p1_element_stiffness",
+    "rigid_body_modes",
     "structured_mesh",
 ]

@@ -1,19 +1,27 @@
-"""Total-FETI domain decomposition of the structured heat-transfer problem.
+"""Total-FETI domain decomposition of structured heat-transfer and
+linear-elasticity problems.
 
 Decomposes a structured box into a grid of equally-sized box subdomains
 (paper Fig. 2), duplicates interface nodes, and builds:
 
-  * per-subdomain stiffness ``K_i`` (SPSD, kernel = constants) and load ``f_i``,
+  * per-subdomain stiffness ``K_i`` (SPSD) and load ``f_i`` — scalar P1
+    heat (kernel = constants, k = 1) or node-blocked vector P1 linear
+    elasticity (kernel = rigid-body modes, k = 3 in 2D / 6 in 3D),
   * the signed boolean gluing matrix ``B`` as per-subdomain dense blocks
     ``B̃ᵢᵀ`` (n_i × m_i) plus global multiplier ids (non-redundant chain
-    gluing between node copies),
+    gluing between DOF copies; vector problems glue every component),
   * Dirichlet conditions on the x=0 face enforced as constraints (total
     FETI: every subdomain stays floating, kernels are uniform),
-  * a fixing node per subdomain for the analytic regularization [11].
+  * the orthonormal kernel basis ``R_i`` (n_i × k) and k fixing DOFs per
+    subdomain for the analytic regularization [11] — see
+    :mod:`repro.fem.regularization`.
 
-All subdomains share the same local topology (same structured box), which is
-what lets the solver batch them through one compiled program — the TPU
-analogue of the paper's per-stream subdomain loop.
+All subdomains share the same local topology (same structured box), which
+is what lets the solver batch them through one compiled program — the TPU
+analogue of the paper's per-stream subdomain loop. They also share the
+kernel basis: the local template's rigid-body modes span every translated
+copy's kernel (a rotation about a shifted origin is that rotation plus a
+translation).
 """
 from __future__ import annotations
 
@@ -26,12 +34,24 @@ import numpy as np
 from repro.fem.assembly import (
     assemble_dense,
     assemble_scipy_csr,
+    elasticity_load_vector,
+    element_dofs,
     load_vector,
+    p1_elasticity_stiffness,
     p1_element_stiffness,
 )
 from repro.fem.meshgen import Mesh, structured_mesh
+from repro.fem.regularization import kernel_basis
 
-__all__ = ["SubdomainData", "FetiProblem", "decompose_heat_problem"]
+__all__ = [
+    "SubdomainData",
+    "FetiProblem",
+    "decompose_problem",
+    "decompose_heat_problem",
+    "decompose_elasticity_problem",
+]
+
+DEFAULT_BODY_FORCE = {2: (0.0, -1.0), 3: (0.0, 0.0, -1.0)}
 
 
 @dataclasses.dataclass
@@ -41,7 +61,8 @@ class SubdomainData:
     Every local multiplier column of B̃ᵀ has exactly ONE ±1 entry (chain
     gluing / Dirichlet pinning), recorded compactly in (b_rows, b_vals);
     the dense Bt is derived from them (and is a placeholder in
-    pattern-only mode).
+    pattern-only mode). Rows of K / f / Bt / R are DOFs in node-blocked
+    order (DOF = node*ndpn + component; ndpn = 1 for heat).
     """
 
     index: int
@@ -50,14 +71,17 @@ class SubdomainData:
     Bt: np.ndarray  # (n_i, m_max) dense ±1, zero-padded columns
     lambda_ids: np.ndarray  # (m_max,) global multiplier ids; pad = n_lambda
     m: int  # actual number of local multipliers
-    node_gids: np.ndarray  # (n_i,) global node ids
-    fixing_node: int  # local node id for regularization
+    node_gids: np.ndarray  # (n_nodes_i,) global node ids
+    dof_gids: np.ndarray  # (n_i,) global DOF ids (= node_gids for heat)
+    fixing_node: int  # local node id anchoring the regularization
+    R: np.ndarray = None  # (n_i, k) orthonormal kernel basis
+    fixing_dofs: np.ndarray = None  # (k,) local DOFs; R[fixing_dofs] invertible
     b_rows: np.ndarray = None  # (m_max,) local row of each column's ±1
     b_vals: np.ndarray = None  # (m_max,) the ±1 values
 
     @property
     def n(self) -> int:
-        return len(self.node_gids)
+        return len(self.dof_gids)
 
 
 @dataclasses.dataclass
@@ -71,7 +95,11 @@ class FetiProblem:
     subdomains: List[SubdomainData]
     c: np.ndarray  # (n_lambda,) constraint rhs (Dirichlet values; zeros here)
     global_mesh: Mesh
-    dirichlet_gids: np.ndarray
+    dirichlet_gids: np.ndarray  # global NODE ids on the x=0 face
+    problem: str = "heat"
+    ndof_per_node: int = 1
+    kernel_dim: int = 1
+    params: dict = dataclasses.field(default_factory=dict)
 
     @property
     def n_subdomains(self) -> int:
@@ -81,17 +109,46 @@ class FetiProblem:
     def m_max(self) -> int:
         return self.subdomains[0].Bt.shape[1]
 
+    @property
+    def n_global_dofs(self) -> int:
+        return self.global_mesh.n_nodes * self.ndof_per_node
+
+    @property
+    def dirichlet_dofs(self) -> np.ndarray:
+        """Global DOF ids pinned by the Dirichlet face (all components)."""
+        ndpn = self.ndof_per_node
+        return (self.dirichlet_gids[:, None] * ndpn
+                + np.arange(ndpn)).reshape(-1)
+
     # ---- reference oracle: undecomposed global solve (tests only) ----
     def reference_solution(self) -> np.ndarray:
-        """Direct sparse solve of the global system with Dirichlet BC."""
+        """Direct sparse solve of the global system with Dirichlet BC.
+
+        Returns the (n_global_dofs,) solution in node-blocked DOF order.
+        """
         import scipy.sparse.linalg as spla
 
         mesh = self.global_mesh
-        Ke = np.asarray(p1_element_stiffness(mesh.coords, mesh.elems))
-        K = assemble_scipy_csr(mesh.n_nodes, mesh.elems, Ke)
-        f = np.asarray(load_vector(mesh.coords, mesh.elems, mesh.n_nodes))
-        free = np.setdiff1d(np.arange(mesh.n_nodes), self.dirichlet_gids)
-        u = np.zeros(mesh.n_nodes)
+        if self.problem == "heat":
+            Ke = np.asarray(p1_element_stiffness(
+                mesh.coords, mesh.elems, kappa=self.params.get("kappa", 1.0)))
+            edofs = mesh.elems
+            f = np.asarray(load_vector(
+                mesh.coords, mesh.elems, mesh.n_nodes,
+                source=self.params.get("source", 1.0)))
+        else:
+            Ke = np.asarray(p1_elasticity_stiffness(
+                mesh.coords, mesh.elems,
+                lam=self.params.get("lam", 1.0),
+                mu=self.params.get("mu", 1.0)))
+            edofs = element_dofs(mesh.elems, self.dim)
+            f = np.asarray(elasticity_load_vector(
+                mesh.coords, mesh.elems, mesh.n_nodes,
+                self.params.get("body_force", DEFAULT_BODY_FORCE[self.dim])))
+        nd = self.n_global_dofs
+        K = assemble_scipy_csr(nd, edofs, Ke)
+        free = np.setdiff1d(np.arange(nd), self.dirichlet_dofs)
+        u = np.zeros(nd)
         u[free] = spla.spsolve(K[free][:, free].tocsc(), f[free])
         return u
 
@@ -101,37 +158,72 @@ def _box_ranges(dim, sub_grid, elems_per_sub):
         yield s
 
 
-def decompose_heat_problem(
+def _fixing_dofs(problem: str, dim: int, lshape: tuple, lstrides: list,
+                 fixing_node: int) -> np.ndarray:
+    """k local DOFs with R[fixing_dofs] invertible (regularization §docs).
+
+    Heat: the fixing node itself. Elasticity: the 3-2-1 locating fixture
+    over spread-out corner nodes of the subdomain box.
+    """
+    if problem == "heat":
+        return np.asarray([fixing_node], dtype=np.int64)
+    nx = lshape[0] - 1  # node index of the far x corner
+    node_a = 0  # local node (0, 0[, 0])
+    node_b = nx * lstrides[0]  # (nx, 0[, 0]): differs from A along x
+    if dim == 2:
+        # A.ux, A.uy pin translations; B.uy pins the rotation
+        return np.asarray([2 * node_a, 2 * node_a + 1, 2 * node_b + 1],
+                          dtype=np.int64)
+    node_c = (lshape[1] - 1) * lstrides[1]  # (0, ny, 0): off the AB axis
+    return np.asarray(
+        [3 * node_a, 3 * node_a + 1, 3 * node_a + 2,
+         3 * node_b + 1, 3 * node_b + 2,
+         3 * node_c + 2],
+        dtype=np.int64)
+
+
+def decompose_problem(
+    problem: str,
     dim: int,
     sub_grid: tuple,
     elems_per_sub: tuple,
     kappa: float = 1.0,
     source: float = 1.0,
+    lam: float = 1.0,
+    mu: float = 1.0,
+    body_force=None,
     dtype=np.float64,
     assemble_values: bool = True,
 ) -> FetiProblem:
-    """Build the total-FETI decomposition of the structured heat problem.
+    """Build the total-FETI decomposition of a structured problem.
 
     Args:
+      problem: "heat" (scalar P1, k=1) or "elasticity" (vector P1,
+        node-blocked DOFs, k=3/6).
       dim: 2 or 3.
       sub_grid: number of subdomains per axis, e.g. (4, 4) or (2, 2, 2).
       elems_per_sub: elements per axis per subdomain, e.g. (8, 8).
+      kappa/source: heat conductivity and source term (heat only).
+      lam/mu/body_force: Lamé parameters and constant body force
+        (elasticity only; body_force defaults to unit downward gravity).
       assemble_values: if False, build topology/patterns only (K and f are
         1x1 placeholders) — the dry-run path, which needs the static
         stepped/symbolic metadata of production-sized subdomains without
         allocating their dense matrices.
     """
+    if problem not in ("heat", "elasticity"):
+        raise ValueError(f"unknown problem {problem!r}")
     if dim != len(sub_grid) or dim != len(elems_per_sub):
         raise ValueError("dim / sub_grid / elems_per_sub mismatch")
+    ndpn = 1 if problem == "heat" else dim
+    if body_force is None:
+        body_force = DEFAULT_BODY_FORCE[dim]
     gshape = tuple(sub_grid[d] * elems_per_sub[d] for d in range(dim))
     gmesh = structured_mesh(gshape)
     gnode_shape = tuple(g + 1 for g in gshape)
     gstrides = [1]
     for d in range(dim - 1):
         gstrides.append(gstrides[-1] * gnode_shape[d])
-
-    def gid_of(idx):  # idx: (dim,) ints
-        return sum(int(idx[d]) * gstrides[d] for d in range(dim))
 
     # local template mesh, shared by all subdomains (same topology)
     spacing = tuple(1.0 / gshape[d] for d in range(dim))
@@ -151,23 +243,28 @@ def decompose_heat_problem(
     lgrid = np.meshgrid(*lranges, indexing="ij")
     lidx = np.stack([g.ravel(order="F") for g in lgrid], axis=1)  # (n_i, dim)
 
-    n_local = int(np.prod(lshape))
+    n_nodes_local = int(np.prod(lshape))
+    n_local = n_nodes_local * ndpn
     for si, s in enumerate(sub_list):
         if assemble_values:
             origin = tuple(s[d] * sub_lengths[d] for d in range(dim))
             lmesh = structured_mesh(elems_per_sub, origin=origin,
                                     lengths=sub_lengths)
-            Ke = np.asarray(
-                p1_element_stiffness(lmesh.coords, lmesh.elems, kappa=kappa)
-            )
-            K = np.asarray(
-                assemble_dense(lmesh.n_nodes, lmesh.elems, Ke)
-            ).astype(dtype)
-            f = np.asarray(
-                load_vector(lmesh.coords, lmesh.elems, lmesh.n_nodes,
-                            source=source)
-            ).astype(dtype)
-        else:  # pattern-only: placeholders carry just the size via .n
+            if problem == "heat":
+                Ke = np.asarray(p1_element_stiffness(
+                    lmesh.coords, lmesh.elems, kappa=kappa))
+                edofs = lmesh.elems
+                f = np.asarray(load_vector(
+                    lmesh.coords, lmesh.elems, lmesh.n_nodes, source=source))
+            else:
+                Ke = np.asarray(p1_elasticity_stiffness(
+                    lmesh.coords, lmesh.elems, lam=lam, mu=mu))
+                edofs = element_dofs(lmesh.elems, dim)
+                f = np.asarray(elasticity_load_vector(
+                    lmesh.coords, lmesh.elems, lmesh.n_nodes, body_force))
+            K = np.asarray(assemble_dense(n_local, edofs, Ke)).astype(dtype)
+            f = f.astype(dtype)
+        else:  # pattern-only: placeholders carry just the size via dof_gids
             K = np.zeros((1, 1), dtype)
             f = np.zeros((1,), dtype)
         gnode = lidx + np.array([s[d] * elems_per_sub[d] for d in range(dim)])
@@ -176,13 +273,22 @@ def decompose_heat_problem(
         fs.append(f)
         gids_per_sub.append(gids.astype(np.int64))
 
+    # shared kernel basis: the local template's constants / rigid modes
+    lmesh0 = structured_mesh(elems_per_sub, lengths=sub_lengths)
+    if problem == "heat":
+        R_shared = kernel_basis(n_local, "heat", dtype=dtype)
+    else:
+        R_shared = kernel_basis(problem="elasticity", coords=lmesh0.coords,
+                                dtype=dtype)
+    kdim = R_shared.shape[1]
+
     # --- ownership: global node -> [(sub, local_id)] ---
     owners: dict[int, list[tuple[int, int]]] = {}
     for si, gids in enumerate(gids_per_sub):
         for lid, g in enumerate(gids):
             owners.setdefault(int(g), []).append((si, lid))
 
-    # --- multipliers ---
+    # --- multipliers (one per node copy pair / pinned copy, per component) ---
     # 1) gluing: chain over the (sub-sorted) copies of each shared node
     # 2) Dirichlet x=0 face: one constraint per copy (total FETI)
     triplets: list[list[tuple[int, int, float]]] = [[] for _ in range(n_subs)]
@@ -197,31 +303,35 @@ def decompose_heat_problem(
             # equality, keeping the constraint set non-redundant.
             dirichlet_gids.append(g)
             for (sa, la) in copies:
-                triplets[sa].append((la, n_lambda, 1.0))
-                c_rows.append(0.0)
-                n_lambda += 1
+                for comp in range(ndpn):
+                    triplets[sa].append((la * ndpn + comp, n_lambda, 1.0))
+                    c_rows.append(0.0)
+                    n_lambda += 1
         else:
             for (sa, la), (sb, lb) in zip(copies, copies[1:]):
-                triplets[sa].append((la, n_lambda, 1.0))
-                triplets[sb].append((lb, n_lambda, -1.0))
-                c_rows.append(0.0)
-                n_lambda += 1
+                for comp in range(ndpn):
+                    triplets[sa].append((la * ndpn + comp, n_lambda, 1.0))
+                    triplets[sb].append((lb * ndpn + comp, n_lambda, -1.0))
+                    c_rows.append(0.0)
+                    n_lambda += 1
 
     m_per_sub = [len(t) for t in triplets]
     m_max = max(m_per_sub)
 
-    # --- fixing node: subdomain center (paper's analytic regularization) ---
+    # --- fixing node: subdomain center (paper's analytic regularization);
+    # the k fixing DOFs generalize it for vector kernels ---
     center = tuple(lshape[d] // 2 for d in range(dim))
     fixing_local = sum(center[d] * lstrides[d] for d in range(dim))
+    fix_dofs = _fixing_dofs(problem, dim, lshape, lstrides, int(fixing_local))
 
     subdomains = []
     for si in range(n_subs):
         n_i = n_local
-        lam = np.full((m_max,), n_lambda, dtype=np.int64)  # pad -> dummy slot
+        lam_ids = np.full((m_max,), n_lambda, dtype=np.int64)  # pad -> dummy
         b_rows = np.zeros((m_max,), dtype=np.int64)
         b_vals = np.zeros((m_max,), dtype=dtype)
         for col, (lid, gl, val) in enumerate(triplets[si]):
-            lam[col] = gl
+            lam_ids[col] = gl
             b_rows[col] = lid
             b_vals[col] = val
         if assemble_values:
@@ -231,21 +341,29 @@ def decompose_heat_problem(
             ]
         else:
             Bt = np.zeros((1, m_max), dtype=dtype)  # placeholder
+        gids = gids_per_sub[si]
+        dof_gids = (gids[:, None] * ndpn
+                    + np.arange(ndpn)).reshape(-1) if ndpn > 1 else gids
         subdomains.append(
             SubdomainData(
                 index=si,
                 K=Ks[si],
                 f=fs[si],
                 Bt=Bt,
-                lambda_ids=lam,
+                lambda_ids=lam_ids,
                 m=m_per_sub[si],
-                node_gids=gids_per_sub[si],
+                node_gids=gids,
+                dof_gids=dof_gids,
                 fixing_node=int(fixing_local),
+                R=R_shared,
+                fixing_dofs=fix_dofs,
                 b_rows=b_rows,
                 b_vals=b_vals,
             )
         )
 
+    params = (dict(kappa=kappa, source=source) if problem == "heat"
+              else dict(lam=lam, mu=mu, body_force=tuple(body_force)))
     return FetiProblem(
         dim=dim,
         sub_grid=tuple(sub_grid),
@@ -255,4 +373,40 @@ def decompose_heat_problem(
         c=np.asarray(c_rows, dtype=dtype),
         global_mesh=gmesh,
         dirichlet_gids=np.asarray(sorted(set(dirichlet_gids)), dtype=np.int64),
+        problem=problem,
+        ndof_per_node=ndpn,
+        kernel_dim=kdim,
+        params=params,
     )
+
+
+def decompose_heat_problem(
+    dim: int,
+    sub_grid: tuple,
+    elems_per_sub: tuple,
+    kappa: float = 1.0,
+    source: float = 1.0,
+    dtype=np.float64,
+    assemble_values: bool = True,
+) -> FetiProblem:
+    """Total-FETI decomposition of the structured heat problem (k = 1)."""
+    return decompose_problem(
+        "heat", dim, sub_grid, elems_per_sub, kappa=kappa, source=source,
+        dtype=dtype, assemble_values=assemble_values)
+
+
+def decompose_elasticity_problem(
+    dim: int,
+    sub_grid: tuple,
+    elems_per_sub: tuple,
+    lam: float = 1.0,
+    mu: float = 1.0,
+    body_force=None,
+    dtype=np.float64,
+    assemble_values: bool = True,
+) -> FetiProblem:
+    """Total-FETI decomposition of structured P1 linear elasticity
+    (node-blocked vector DOFs, rigid-body kernels of dimension 3/6)."""
+    return decompose_problem(
+        "elasticity", dim, sub_grid, elems_per_sub, lam=lam, mu=mu,
+        body_force=body_force, dtype=dtype, assemble_values=assemble_values)

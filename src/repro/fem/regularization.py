@@ -1,38 +1,119 @@
-"""Analytic (fixing-node) regularization of the SPSD subdomain matrices
-(paper §2.2, [Brzobohatý et al. 2011]).
+"""Analytic (fixing-DOF) regularization of the SPSD subdomain matrices
+(paper §2.2, [Brzobohatý et al. 2011]), for kernel dimension k ≥ 1.
 
-For the scalar heat problem the kernel of each floating subdomain matrix is
-the constant vector, so a single fixing node suffices:
+Pick exactly k fixing DOFs such that the kernel basis restricted to those
+rows, ``R_f = R[fixing_dofs]`` (k × k), is invertible, and add ρ to their
+diagonal entries:
 
-    K_reg = K + ρ e_j e_jᵀ
+    K_reg = K + ρ Σ_{j ∈ fixing_dofs} e_j e_jᵀ
 
-For any rhs ∈ range(K), ``K_reg⁻¹ rhs`` is an *exact* particular solution
-(K_reg r ∝ e_j for kernel vector r, hence e_jᵀ K_reg⁻¹ rhs = rᵀ rhs / ρ' = 0),
-which makes ``K⁺ := K_reg⁻¹`` an exact generalized inverse (K K⁺ K = K) —
-the property FETI needs from eq. (5).
+For any rhs ∈ range(K), ``K_reg⁻¹ rhs`` is an *exact* particular solution:
+multiplying ``K_reg u = rhs`` by Rᵀ gives ``ρ R_fᵀ u_f = 0`` (both RᵀK u
+and Rᵀ rhs vanish), and R_f invertible forces ``u_f = 0``, hence
+``K u = rhs`` exactly. So ``K⁺ := K_reg⁻¹`` satisfies K K⁺ K = K — the
+generalized-inverse property FETI needs from eq. (5). Because only
+diagonal entries are touched, the stiffness sparsity pattern — and with it
+the symbolic factorization — is unchanged.
+
+Instances:
+  * heat (k = 1, kernel = constants): one fixing node, the classic single
+    ``K + ρ e_j e_jᵀ``.
+  * 2D elasticity (k = 3): the 2D "3-2-1" fixture — both components of one
+    node plus the y-component of a node at a different x.
+  * 3D elasticity (k = 6): the 3-2-1 locating rule — all of node A, two of
+    node B on the x-axis from A, one of node C off that axis.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["fixing_node_regularization", "kernel_basis"]
+__all__ = [
+    "fixing_node_regularization",
+    "fixing_dofs_regularization",
+    "kernel_basis",
+    "rigid_body_modes",
+]
 
 
-def fixing_node_regularization(K, fixing_node: int, rho: float | None = None):
-    """Return K + ρ·e_j e_jᵀ (works for numpy and jax arrays)."""
+def fixing_dofs_regularization(K, fixing_dofs, rho: float | None = None):
+    """Return K + ρ·Σ_j e_j e_jᵀ over the k fixing DOFs (numpy or jax)."""
+    fixing_dofs = np.atleast_1d(np.asarray(fixing_dofs, dtype=np.int64))
     if rho is None:
         if isinstance(K, np.ndarray):
             rho = float(np.mean(np.diag(K)))
         else:
+            import jax.numpy as jnp
+
             rho = jnp.mean(jnp.diag(K))
     if isinstance(K, np.ndarray):
         K = K.copy()
-        K[fixing_node, fixing_node] += rho
+        K[fixing_dofs, fixing_dofs] += rho
         return K
-    return K.at[fixing_node, fixing_node].add(rho)
+    return K.at[fixing_dofs, fixing_dofs].add(rho)
 
 
-def kernel_basis(n: int, dtype=np.float64) -> np.ndarray:
-    """Orthonormal basis of Ker(K_i) for the heat problem: the constant."""
-    return np.full((n, 1), 1.0 / np.sqrt(n), dtype=dtype)
+def fixing_node_regularization(K, fixing_node: int, rho: float | None = None):
+    """The k = 1 (scalar heat) case: K + ρ·e_j e_jᵀ."""
+    return fixing_dofs_regularization(K, [fixing_node], rho=rho)
+
+
+def rigid_body_modes(coords: np.ndarray, dtype=np.float64) -> np.ndarray:
+    """Raw (un-orthonormalized) rigid-body modes of a 2D/3D point cloud.
+
+    Returns (n_nodes*d, k) in node-blocked DOF order: d translations plus
+    1 (2D) or 3 (3D) infinitesimal rotations about the centroid.
+    """
+    coords = np.asarray(coords, dtype=dtype)
+    nn, d = coords.shape
+    x = coords - coords.mean(axis=0)  # centering only affects conditioning
+    k = 3 if d == 2 else 6
+    R = np.zeros((nn, d, k), dtype=dtype)
+    for c in range(d):  # translations
+        R[:, c, c] = 1.0
+    if d == 2:
+        R[:, 0, 2] = -x[:, 1]
+        R[:, 1, 2] = x[:, 0]
+    else:
+        R[:, 0, 3] = -x[:, 1]
+        R[:, 1, 3] = x[:, 0]
+        R[:, 1, 4] = -x[:, 2]
+        R[:, 2, 4] = x[:, 1]
+        R[:, 0, 5] = x[:, 2]
+        R[:, 2, 5] = -x[:, 0]
+    return R.reshape(nn * d, k)
+
+
+def _orthonormalize(R: np.ndarray) -> np.ndarray:
+    """QR-orthonormalize columns with a deterministic sign convention
+    (each column's largest-magnitude entry is positive)."""
+    Q, _ = np.linalg.qr(R)
+    for j in range(Q.shape[1]):
+        col = Q[:, j]
+        if col[np.argmax(np.abs(col))] < 0:
+            Q[:, j] = -col
+    return Q
+
+
+def kernel_basis(n: int | None = None, problem: str = "heat",
+                 coords: np.ndarray | None = None,
+                 dtype=np.float64) -> np.ndarray:
+    """Orthonormal basis of Ker(K_i) as an (n, k) column matrix.
+
+    * ``problem="heat"``: the normalized constant — (n, 1), needs ``n``.
+    * ``problem="elasticity"``: the rigid-body modes of the subdomain's
+      nodes — (n_nodes*d, k) with k = 3 (2D) / 6 (3D), needs ``coords``.
+
+    Both go through the same orthonormalization, so the heat column is
+    exactly the familiar ``1/sqrt(n)`` constant.
+    """
+    if problem == "heat":
+        if n is None:
+            raise ValueError("heat kernel_basis needs n")
+        raw = np.ones((n, 1), dtype=dtype)
+    elif problem == "elasticity":
+        if coords is None:
+            raise ValueError("elasticity kernel_basis needs coords")
+        raw = rigid_body_modes(coords, dtype=dtype)
+    else:
+        raise ValueError(f"unknown problem {problem!r}")
+    return _orthonormalize(raw)

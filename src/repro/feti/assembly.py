@@ -35,7 +35,7 @@ from repro.core.autotune import Plan, pattern_fingerprint, plan_from_builder
 from repro.core.stepped import SteppedMeta
 from repro.fem.decomposition import FetiProblem
 from repro.fem.meshgen import structured_mesh
-from repro.fem.regularization import fixing_node_regularization
+from repro.fem.regularization import fixing_dofs_regularization
 from repro.feti import sharded as shlib
 from repro.sparse import (
     block_pattern,
@@ -51,7 +51,27 @@ from repro.sparse.packed import (
     block_cholesky_packed,
 )
 
-__all__ = ["ClusterState", "preprocess_cluster", "batched_assemble"]
+__all__ = ["ClusterState", "preprocess_cluster", "batched_assemble",
+           "expand_node_perm", "expand_node_pattern"]
+
+
+def expand_node_perm(node_perm: np.ndarray, ndpn: int) -> np.ndarray:
+    """Expand a node permutation to node-blocked DOFs (identity for
+    ndpn=1): each node's ndpn components move together, staying adjacent."""
+    if ndpn == 1:
+        return node_perm
+    return (node_perm[:, None] * ndpn
+            + np.arange(ndpn, dtype=node_perm.dtype)).reshape(-1)
+
+
+def expand_node_pattern(npat: np.ndarray, ndpn: int) -> np.ndarray:
+    """Expand a node adjacency pattern to node-blocked DOFs: every entry
+    becomes a dense (ndpn, ndpn) block (identity for ndpn=1). The one
+    definition shared by the preprocessor, the dry-run planner and the
+    benchmarks, so their symbolic layouts can never diverge."""
+    if ndpn == 1:
+        return npat
+    return np.kron(npat, np.ones((ndpn, ndpn), dtype=bool))
 
 
 @dataclasses.dataclass
@@ -85,7 +105,8 @@ class ClusterState:
     lambda_ids: jax.Array  # (S, m_max) global multiplier ids (pad=n_lambda)
     col_perm: jax.Array  # (S_real, m_max) stepped column perm per subdomain
     inv_col_perm: jax.Array  # (S_real, m_max)
-    r_norm: jax.Array  # (S,) 1/sqrt(n): the normalized constant kernel entry
+    R: jax.Array  # (S, n, k) orthonormal kernel bases, original DOF order
+    #              (k = 1 heat constant; 3/6 elasticity rigid-body modes)
     mesh: Optional[jax.sharding.Mesh] = None  # set => stacks sharded over it
     n_real: Optional[int] = None  # subdomain count before mesh padding
     relabeled: bool = False  # multiplier columns in stepped (relabeled) order
@@ -207,21 +228,29 @@ def make_cluster_preprocessor(
     subs = problem.subdomains
     S = len(subs)
     n = subs[0].n
+    ndpn = problem.ndof_per_node
+    n_nodes = n // ndpn
     m_max = problem.m_max
     node_shape = tuple(e + 1 for e in problem.elems_per_sub)
 
     # ---- symbolic phase (host, shared by all subdomains) ----
     if ordering == "nd":
-        node_perm = nested_dissection_order(node_shape)
+        nperm = nested_dissection_order(node_shape)
     elif ordering == "rcm":
-        node_perm = rcm_order(node_shape)
+        nperm = rcm_order(node_shape)
     elif ordering == "natural":
-        node_perm = np.arange(n, dtype=np.int64)
+        nperm = np.arange(n_nodes, dtype=np.int64)
     else:
         raise ValueError(f"unknown ordering {ordering!r}")
 
     lmesh = structured_mesh(problem.elems_per_sub)
-    kpat = matrix_pattern_from_elems(n, lmesh.elems)[node_perm][:, node_perm]
+    npat = matrix_pattern_from_elems(n_nodes, lmesh.elems)[nperm][:, nperm]
+    # vector problems: node-blocked DOFs stay adjacent under the expanded
+    # permutation, and the DOF pattern is the node pattern with every
+    # entry blown up to an (ndpn, ndpn) block — the natural stress case
+    # for the block-sparse packed factor layout
+    node_perm = expand_node_perm(nperm, ndpn)
+    kpat = expand_node_pattern(npat, ndpn)
     patterns = [sd.Bt[node_perm] != 0 for sd in subs]
 
     # builder used both by the autotuner (scoring candidate block sizes)
@@ -356,7 +385,6 @@ def preprocess_cluster(
     """
     subs = problem.subdomains
     S = len(subs)
-    n = subs[0].n
     static, prep = make_cluster_preprocessor(
         problem, cfg, explicit, ordering, measure=measure,
         plan_cache=plan_cache, mesh=mesh, storage=storage)
@@ -365,7 +393,7 @@ def preprocess_cluster(
     index: PackedBlockIndex = static["index"]
 
     Kreg = np.stack(
-        [fixing_node_regularization(sd.K, sd.fixing_node) for sd in subs]
+        [fixing_dofs_regularization(sd.K, sd.fixing_dofs) for sd in subs]
     )
     Kp = Kreg[:, node_perm][:, :, node_perm]
     Btp = np.stack([sd.Bt[node_perm] for sd in subs])
@@ -401,6 +429,10 @@ def preprocess_cluster(
         def to_dev(x, dt=dtype):
             return shlib.shard_stack(mesh, np.asarray(x, dtype=dt))
 
+    R_stack = np.stack([sd.R for sd in subs])  # (S, n, k) original order
+    if mesh is not None:
+        R_stack = shlib.pad_stack(R_stack, S_pad)  # zero kernels for dummies
+
     Kp_j = to_dev(Kp)
     Btp_j = to_dev(Btp)
     L, F = prep(Kp_j, Btp_j)
@@ -409,7 +441,6 @@ def preprocess_cluster(
     K_vals = np.asarray(index.pack(jnp.asarray(K_perm, dtype=dtype)))
     K_packed = PackedBlocks(to_dev(K_vals), index)
 
-    r_norm = to_dev(np.full((S_pad,), 1.0 / np.sqrt(n)))
     f_j = to_dev(f)
     fp_j = to_dev(f[:, node_perm])
     return ClusterState(
@@ -429,7 +460,7 @@ def preprocess_cluster(
         lambda_ids=to_dev(lam, dt=None),
         col_perm=static["col_perm"],
         inv_col_perm=static["inv_col_perm"],
-        r_norm=r_norm,
+        R=to_dev(R_stack),
         mesh=mesh,
         n_real=S if mesh is not None else None,
         relabeled=mesh is not None,

@@ -1,5 +1,12 @@
 """Natural coarse space of FETI: G = BR, the projector
-P = I − G(GᵀG)⁻¹Gᵀ, and the α recovery (paper §2.1, eqs. 4–7)."""
+P = I − G(GᵀG)⁻¹Gᵀ, and the α recovery (paper §2.1, eqs. 4–7).
+
+``R`` is the subdomain-stacked kernel basis (S, n, k): k = 1 for scalar
+heat (the normalized constant), k = 3/6 for 2D/3D elasticity (rigid-body
+modes). Each subdomain contributes k columns to G, so G is
+(n_lambda, S·k), GᵀG is the (S·k, S·k) block Gram matrix, and α is the
+flattened (S·k,) vector of kernel coefficients.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -10,29 +17,30 @@ import jax.numpy as jnp
 __all__ = ["CoarseProblem", "build_coarse_problem", "coarse_g_e"]
 
 
-def coarse_g_e(Bt: jax.Array, f: jax.Array, r_norm: jax.Array,
+def coarse_g_e(Bt: jax.Array, f: jax.Array, R: jax.Array,
                lambda_ids: jax.Array, n_lambda: int):
     """G = BR columns and e = Rᵀf for a stack of subdomains.
 
-    R is the normalized constant kernel (one column per subdomain), so
-    column i of G is scatter(lambda_ids_i, B̃ᵢ r_i) with r_i = r_norm·1.
+    ``R`` is (S, n, k); subdomain i contributes the k columns
+    scatter(lambda_ids_i, B̃ᵢ R_i), laid out subdomain-major in the
+    (n_lambda, S·k) result; ``e`` is the matching (S·k,) flat Rᵀf.
     The shared body of the single-device construction below and of the
     per-shard body in :mod:`repro.feti.sharded` (where ``Bt`` is that
     device's slice of subdomains)."""
-    S = Bt.shape[0]
-    vals = jnp.einsum("snm,s->sm", Bt, r_norm)  # (S, m_max)
+    S, _, k = R.shape
+    vals = jnp.einsum("snm,snk->smk", Bt, R)  # (S, m_max, k)
     s_idx = jnp.broadcast_to(jnp.arange(S)[:, None], lambda_ids.shape)
-    G = jnp.zeros((n_lambda + 1, S), Bt.dtype)
-    G = G.at[lambda_ids, s_idx].add(vals)[:-1]
-    e = jnp.sum(f, axis=1) * r_norm
+    G = jnp.zeros((n_lambda + 1, S, k), Bt.dtype)
+    G = G.at[lambda_ids, s_idx].add(vals)[:-1].reshape(n_lambda, S * k)
+    e = jnp.einsum("sn,snk->sk", f, R).reshape(S * k)
     return G, e
 
 
 @dataclasses.dataclass
 class CoarseProblem:
-    G: jax.Array  # (n_lambda, S)
-    GtG_chol: jax.Array  # (S, S) Cholesky factor of GᵀG
-    e: jax.Array  # (S,) = Rᵀf
+    G: jax.Array  # (n_lambda, S·k)
+    GtG_chol: jax.Array  # (S·k, S·k) Cholesky factor of GᵀG
+    e: jax.Array  # (S·k,) = Rᵀf, subdomain-major
 
     def solve_coarse(self, b: jax.Array) -> jax.Array:
         """(GᵀG)⁻¹ b via the cached Cholesky factor."""
@@ -50,20 +58,21 @@ class CoarseProblem:
         return self.G @ self.solve_coarse(self.e)
 
     def alpha(self, Flam_minus_d: jax.Array) -> jax.Array:
-        """α = (GᵀG)⁻¹Gᵀ(Fλ − d)."""
+        """α = (GᵀG)⁻¹Gᵀ(Fλ − d): (S·k,), reshape to (S, k) per subdomain."""
         return self.solve_coarse(self.G.T @ Flam_minus_d)
 
 
-def build_coarse_problem(Bt: jax.Array, f: jax.Array, r_norm: jax.Array,
+def build_coarse_problem(Bt: jax.Array, f: jax.Array, R: jax.Array,
                          lambda_ids: jax.Array, n_lambda: int) -> CoarseProblem:
-    """Assemble G = BR (R = normalized constants per subdomain) and e = Rᵀf.
+    """Assemble G = BR (R = stacked kernel bases) and e = Rᵀf.
 
-    ``Bt`` may be in any consistent row (node) order — R is constant so the
-    permutation drops out of Bᵀr; we pass the original-order B̃ᵀ.
+    ``Bt`` and ``R`` must share a row (DOF) order — any consistent one
+    works, since the shared permutation drops out of B̃ᵢ R_i; we pass the
+    original-order B̃ᵀ and R.
     """
-    S = Bt.shape[0]
-    G, e = coarse_g_e(Bt, f, r_norm, lambda_ids, n_lambda)
+    G, e = coarse_g_e(Bt, f, R, lambda_ids, n_lambda)
+    ncols = G.shape[1]
     GtG = G.T @ G
     # tiny jitter for the (rare) case of exactly-singular coarse problems
-    GtG = GtG + 1e-12 * jnp.trace(GtG) / S * jnp.eye(S, dtype=Bt.dtype)
+    GtG = GtG + 1e-12 * jnp.trace(GtG) / ncols * jnp.eye(ncols, dtype=Bt.dtype)
     return CoarseProblem(G=G, GtG_chol=jnp.linalg.cholesky(GtG), e=e)

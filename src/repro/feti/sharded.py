@@ -236,9 +236,10 @@ def dual_rhs(
 class ShardedCoarseProblem(CoarseProblem):
     """Natural coarse space with G = BR column-sharded over subdomains.
 
-    ``G`` keeps one column per (padded) subdomain on that subdomain's
-    device — shape (n_lambda, S_pad), columns sharded over AXIS; the tiny
-    (S_pad, S_pad) Gram Cholesky factor and e = Rᵀf are replicated
+    ``G`` keeps each (padded) subdomain's k kernel columns on that
+    subdomain's device — shape (n_lambda, S_pad·k), columns sharded over
+    AXIS in subdomain-major order; the tiny (S_pad·k, S_pad·k) Gram
+    Cholesky factor and e = Rᵀf are replicated
     (``solve_coarse`` is inherited unchanged). The projector applications
     split into a communication-free local Gᵀx (columns are disjoint) and a
     psum'd G·t — the same exchange pattern as the dual operator.
@@ -281,33 +282,37 @@ def build_coarse_problem(
     mesh: Mesh,
     Bt: jax.Array,
     f: jax.Array,
-    r_norm: jax.Array,
+    R: jax.Array,
     lambda_ids: jax.Array,
     n_lambda: int,
     S_real: int,
 ) -> ShardedCoarseProblem:
     """Assemble G = BR and e = Rᵀf from subdomain-sharded (padded) stacks.
 
+    ``R`` is the (S_pad, n, k) kernel-basis stack (zero for padding).
     Padded subdomains have zero B̃ᵀ and zero load, so their G columns and e
     entries are exactly zero: the padded Gram matrix is block-diagonal and
-    the regularizing jitter (scaled by the *real* subdomain count, matching
-    the single-device construction) keeps its factor well-defined while the
-    padded α components stay exactly zero through both triangular solves.
+    the regularizing jitter (scaled by the *real* column count S_real·k,
+    matching the single-device construction) keeps its factor well-defined
+    while the padded α components stay exactly zero through both
+    triangular solves.
     """
-    S_pad = Bt.shape[0]
+    k = R.shape[2]
+    ncols_pad = Bt.shape[0] * k
 
-    def body(Bt_l, f_l, rn_l, ids_l):
-        return coarse_g_e(Bt_l, f_l, rn_l, ids_l, n_lambda)
+    def body(Bt_l, f_l, R_l, ids_l):
+        return coarse_g_e(Bt_l, f_l, R_l, ids_l, n_lambda)
 
     G, e = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(AXIS),) * 4,
         out_specs=(P(None, AXIS), P(AXIS)),
-    )(Bt, f, r_norm, lambda_ids)
+    )(Bt, f, R, lambda_ids)
 
-    GtG = G.T @ G  # (S_pad, S_pad): tiny, GSPMD gathers the columns
-    GtG = GtG + 1e-12 * jnp.trace(GtG) / S_real * jnp.eye(S_pad, dtype=Bt.dtype)
+    GtG = G.T @ G  # (S_pad·k, S_pad·k): tiny, GSPMD gathers the columns
+    GtG = GtG + 1e-12 * jnp.trace(GtG) / (S_real * k) * jnp.eye(
+        ncols_pad, dtype=Bt.dtype)
     chol = jax.device_put(jnp.linalg.cholesky(GtG), replicated_sharding(mesh))
     e = jax.device_put(e, replicated_sharding(mesh))
     return ShardedCoarseProblem(mesh=mesh, G=G, GtG_chol=chol, e=e)

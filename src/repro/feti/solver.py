@@ -41,10 +41,10 @@ __all__ = ["FetiSolver", "FetiSolution"]
 
 @dataclasses.dataclass
 class FetiSolution:
-    u: np.ndarray  # (S, n) subdomain solutions, original node order
-    u_global: np.ndarray  # (n_nodes,) averaged onto the global mesh
+    u: np.ndarray  # (S, n) subdomain solutions, original DOF order
+    u_global: np.ndarray  # (n_global_dofs,) averaged onto the global mesh
     lam: np.ndarray
-    alpha: np.ndarray
+    alpha: np.ndarray  # (S, k) kernel coefficients per subdomain
     iterations: int
     residual: float
     converged: bool
@@ -135,7 +135,7 @@ class FetiSolver:
         if st.mesh is None:
             Bt_orig = jnp.asarray(Bt_host, dtype=self.dtype)
             coarse = build_coarse_problem(
-                Bt_orig, st.f, st.r_norm, st.lambda_ids, nl
+                Bt_orig, st.f, st.R, st.lambda_ids, nl
             )
             if self.mode == "explicit":
                 apply_F = partial(explicit_dual_apply, st.F, st.lambda_ids,
@@ -158,7 +158,7 @@ class FetiSolver:
                 st.mesh, np.asarray(shlib.pad_stack(Bt_rel, st.S),
                                     dtype=self.dtype))
             coarse = shlib.build_coarse_problem(
-                st.mesh, Bt_orig, st.f, st.r_norm, st.lambda_ids, nl,
+                st.mesh, Bt_orig, st.f, st.R, st.lambda_ids, nl,
                 S_real=st.S_real,
             )
             if self.mode == "explicit":
@@ -195,25 +195,27 @@ class FetiSolver:
 
         # ---- recover α and u (paper eqs. 5, 7) ----
         Flam = apply_F(res.lam)
-        alpha = coarse.alpha(Flam - d)
+        alpha = coarse.alpha(Flam - d)  # (S·k,), subdomain-major
         lam_loc = gather_local(res.lam, st.lambda_ids)
         rhs = st.fp - jnp.einsum("snm,sm->sn", st.Btp, lam_loc)
         up = solve_with_factor(st.L, rhs)
-        # back to original node order + rigid body (constant) correction;
-        # drop any inert mesh-padding subdomains (S_real == S unsharded)
+        # back to original DOF order + kernel (rigid-body) correction
+        # u_i = K⁺(f − Bᵀλ)_i + R_i α_i; drop any inert mesh-padding
+        # subdomains (S_real == S unsharded)
+        k = st.R.shape[2]
         inv_perm = np.argsort(st.node_perm)
         up_h = np.asarray(up)[: st.S_real]
-        alpha = np.asarray(alpha)[: st.S_real]
-        r_norm_h = np.asarray(st.r_norm)[: st.S_real]
-        u = up_h[:, inv_perm] + alpha[:, None] * r_norm_h[:, None]
+        alpha = np.asarray(alpha).reshape(st.S, k)[: st.S_real]
+        R_h = np.asarray(st.R)[: st.S_real]
+        u = up_h[:, inv_perm] + np.einsum("snk,sk->sn", R_h, alpha)
 
-        # average duplicated interface copies onto the global mesh
-        nn = prob.global_mesh.n_nodes
+        # average duplicated interface copies onto the global mesh (DOFs)
+        nn = prob.n_global_dofs
         acc = np.zeros(nn)
         cnt = np.zeros(nn)
         for i, sd in enumerate(prob.subdomains):
-            np.add.at(acc, sd.node_gids, u[i])
-            np.add.at(cnt, sd.node_gids, 1.0)
+            np.add.at(acc, sd.dof_gids, u[i])
+            np.add.at(cnt, sd.dof_gids, 1.0)
         u_global = acc / np.maximum(cnt, 1.0)
 
         return FetiSolution(

@@ -159,7 +159,7 @@ def _feti_setup(fc: FetiArchConfig):
     Memoized: the 2M-node topology build is host-side-expensive and shared
     by assembly/solve_iter × both meshes."""
     key = (fc.dim, fc.sub_grid, fc.elems_per_sub, fc.block_size,
-           fc.rhs_block_size, fc.trsm_variant, fc.syrk_variant)
+           fc.rhs_block_size, fc.trsm_variant, fc.syrk_variant, fc.problem)
     if key in _FETI_SETUP_CACHE:
         return _FETI_SETUP_CACHE[key]
     out = _feti_setup_impl(fc)
@@ -170,8 +170,9 @@ def _feti_setup(fc: FetiArchConfig):
 def _feti_setup_impl(fc: FetiArchConfig):
     from repro.core import SchurAssemblyConfig, shared_envelope
     from repro.core.stepped import build_stepped_meta_from_pivots
-    from repro.fem.decomposition import decompose_heat_problem
+    from repro.fem.decomposition import decompose_problem
     from repro.fem.meshgen import structured_mesh
+    from repro.feti.assembly import expand_node_pattern, expand_node_perm
     from repro.sparse import (
         block_pattern,
         block_symbolic_cholesky,
@@ -179,15 +180,21 @@ def _feti_setup_impl(fc: FetiArchConfig):
         nested_dissection_order,
     )
 
-    prob = decompose_heat_problem(fc.dim, fc.sub_grid, fc.elems_per_sub,
-                                  assemble_values=False)
+    prob = decompose_problem(fc.problem, fc.dim, fc.sub_grid,
+                             fc.elems_per_sub, assemble_values=False)
+    ndpn = prob.ndof_per_node
     node_shape = tuple(e + 1 for e in fc.elems_per_sub)
-    n = int(np.prod(node_shape))
-    node_perm = nested_dissection_order(node_shape)
-    inv_node = np.empty_like(node_perm)
-    inv_node[node_perm] = np.arange(n)
-    lmesh = structured_mesh(fc.elems_per_sub)
-    kpat = matrix_pattern_from_elems(n, lmesh.elems)[node_perm][:, node_perm]
+    n_nodes = int(np.prod(node_shape))
+    n = n_nodes * ndpn
+    nperm = nested_dissection_order(node_shape)
+    npat = matrix_pattern_from_elems(
+        n_nodes, structured_mesh(fc.elems_per_sub).elems)[nperm][:, nperm]
+    # vector problems: node-blocked DOF expansion of the perm + pattern
+    # (same scheme as repro.feti.assembly.make_cluster_preprocessor)
+    dof_perm = expand_node_perm(nperm, ndpn)
+    kpat = expand_node_pattern(npat, ndpn)
+    inv_dof = np.empty_like(dof_perm)
+    inv_dof[dof_perm] = np.arange(n)
     cfg = SchurAssemblyConfig(
         trsm_variant=fc.trsm_variant, syrk_variant=fc.syrk_variant,
         block_size=fc.block_size, rhs_block_size=fc.rhs_block_size,
@@ -200,7 +207,7 @@ def _feti_setup_impl(fc: FetiArchConfig):
     m_pad = -(-prob.m_max // 64) * 64
     for sd in prob.subdomains:
         piv = np.full((m_pad,), n, np.int64)
-        piv[: sd.m] = inv_node[sd.b_rows[: sd.m]]
+        piv[: sd.m] = inv_dof[sd.b_rows[: sd.m]]
         me = build_stepped_meta_from_pivots(piv, n, cfg.block_size, cfg.rhs_bs)
         metas.append(me)
         cps.append(me.perm)

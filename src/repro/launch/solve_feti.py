@@ -6,6 +6,12 @@ PCPG solve for a registered FETI architecture, reports stage timings,
 iteration counts and the amortization point, and validates against the
 undecomposed global solve.
 
+``--problem {heat,elasticity}`` overrides the architecture's workload:
+``elasticity`` solves vector-valued P1 linear elasticity (node-blocked
+2-3 DOFs per node) with rigid-body-mode kernels of dimension 3 (2D) / 6
+(3D) — the paper's target engineering setting (docs/elasticity.md).
+Dedicated ``feti-elasticity-{2d,3d}`` architectures default to it.
+
 ``--autotune`` replaces the architecture's hand-picked assembly config with
 the planner of :mod:`repro.core.autotune` (the paper's Table-1 choice made
 automatically), prints the selected plan with predicted-vs-measured cost,
@@ -29,6 +35,11 @@ def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", default="feti-heat-2d")
     p.add_argument("--smoke", action="store_true")
+    p.add_argument("--problem", choices=("heat", "elasticity"), default=None,
+                   help="workload override: scalar heat (1 DOF/node, "
+                        "kernel dim 1) or vector linear elasticity "
+                        "(2-3 DOFs/node, rigid-body kernel dim 3/6); "
+                        "default: the architecture's own problem")
     p.add_argument("--mode", choices=("explicit", "implicit"),
                    default="explicit")
     p.add_argument("--tol", type=float, default=1e-9)
@@ -65,7 +76,7 @@ def main(argv=None) -> int:
 
     from repro.configs import FetiArchConfig, get_config, get_smoke_config
     from repro.core import SchurAssemblyConfig
-    from repro.fem import decompose_heat_problem
+    from repro.fem import decompose_problem
     from repro.feti import FetiSolver
     from repro.launch.mesh import make_feti_mesh
 
@@ -83,9 +94,12 @@ def main(argv=None) -> int:
     if not isinstance(fc, FetiArchConfig):
         raise SystemExit(f"{args.arch} is not a FETI architecture")
 
-    prob = decompose_heat_problem(fc.dim, fc.sub_grid, fc.elems_per_sub)
-    print(f"[feti] {fc.name}: {prob.n_subdomains} subdomains x "
-          f"{prob.subdomains[0].n} DOFs, {prob.n_lambda} multipliers")
+    problem = args.problem or fc.problem
+    prob = decompose_problem(problem, fc.dim, fc.sub_grid, fc.elems_per_sub)
+    print(f"[feti] {fc.name}: problem={problem} "
+          f"({prob.ndof_per_node} DOF/node, kernel dim {prob.kernel_dim}), "
+          f"{prob.n_subdomains} subdomains x {prob.subdomains[0].n} DOFs, "
+          f"{prob.n_lambda} multipliers")
 
     if args.autotune:
         cfg = "auto"

@@ -125,12 +125,13 @@ def test_smoke_decode_step(arch):
 @pytest.mark.parametrize("arch", FETI_ARCHS)
 def test_smoke_feti_solve(arch):
     from repro.core import SchurAssemblyConfig
-    from repro.fem import decompose_heat_problem
+    from repro.fem import decompose_problem
     from repro.feti import FetiSolver
 
     fc = get_smoke_config(arch)
     assert isinstance(fc, FetiArchConfig)
-    prob = decompose_heat_problem(fc.dim, fc.sub_grid, fc.elems_per_sub)
+    prob = decompose_problem(fc.problem, fc.dim, fc.sub_grid,
+                             fc.elems_per_sub)
     cfg = SchurAssemblyConfig(
         trsm_variant=fc.trsm_variant, syrk_variant=fc.syrk_variant,
         block_size=fc.block_size, rhs_block_size=fc.rhs_block_size,

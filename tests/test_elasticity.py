@@ -1,0 +1,245 @@
+"""Oracle test tier for the linear-elasticity FETI workload.
+
+Pins the whole pipeline — assembly, rigid-body coarse space (kernel dim
+3/6), dense and packed storage, single-device and sharded — against
+undecomposed reference solves:
+
+  * FETI elasticity solve == global scipy sparse solve (≤ 1e-8, 2D & 3D),
+  * patch test: the P1 elasticity discretization reproduces affine
+    displacement fields exactly,
+  * kernel property: ‖K_i R_i‖ ≤ 1e-10 for every subdomain's rigid-body
+    basis, and the fixing-DOF regularization is an exact generalized
+    inverse,
+  * decomposition invariants for vector (node-blocked) DOFs.
+
+The slower 3D oracle solves carry the ``elasticity`` marker so CI lanes
+can select them (``pytest -m elasticity``).
+"""
+import numpy as np
+import pytest
+
+from repro.core import SchurAssemblyConfig
+from repro.fem import (
+    assemble_scipy_csr,
+    decompose_elasticity_problem,
+    element_dofs,
+    fixing_dofs_regularization,
+    kernel_basis,
+    p1_elasticity_stiffness,
+    structured_mesh,
+)
+from repro.feti import FetiSolver
+
+elasticity = pytest.mark.elasticity
+
+CFG = SchurAssemblyConfig(block_size=8, rhs_block_size=8)
+CFG_P = SchurAssemblyConfig(block_size=8, rhs_block_size=8, storage="packed")
+
+
+@pytest.fixture(scope="module")
+def ela2d():
+    return decompose_elasticity_problem(2, (2, 2), (4, 4))
+
+
+@pytest.fixture(scope="module")
+def ela3d():
+    return decompose_elasticity_problem(3, (2, 2, 1), (2, 2, 2))
+
+
+def _oracle_error(prob, sol):
+    u_ref = prob.reference_solution()
+    return np.max(np.abs(sol.u_global - u_ref)) / np.abs(u_ref).max()
+
+
+# --------------------------------------------------------------------------
+# the oracle: FETI == undecomposed global solve, ≤ 1e-8
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["explicit", "implicit"])
+@pytest.mark.parametrize("storage", ["dense", "packed"])
+def test_feti_elasticity_2d_matches_oracle(ela2d, mode, storage):
+    sol = FetiSolver(ela2d, CFG, mode=mode, storage=storage).solve(tol=1e-10)
+    assert sol.converged
+    assert _oracle_error(ela2d, sol) <= 1e-8
+    assert sol.alpha.shape == (ela2d.n_subdomains, 3)
+
+
+@elasticity
+@pytest.mark.parametrize("storage", ["dense", "packed"])
+def test_feti_elasticity_3d_matches_oracle(ela3d, storage):
+    sol = FetiSolver(ela3d, CFG, storage=storage).solve(tol=1e-10)
+    assert sol.converged
+    assert _oracle_error(ela3d, sol) <= 1e-8
+    assert sol.alpha.shape == (ela3d.n_subdomains, 6)
+
+
+def test_feti_elasticity_interface_continuity(ela2d):
+    """Duplicated interface DOF copies agree across subdomains."""
+    sol = FetiSolver(ela2d, CFG).solve(tol=1e-10)
+    scale = np.abs(sol.u_global).max()
+    vals: dict[int, list[float]] = {}
+    for i, sd in enumerate(ela2d.subdomains):
+        for lid, g in enumerate(sd.dof_gids):
+            vals.setdefault(int(g), []).append(sol.u[i, lid])
+    for g, vs in vals.items():
+        if len(vs) > 1:
+            assert np.ptp(vs) < 1e-8 * scale, f"interface jump at DOF {g}"
+
+
+# --------------------------------------------------------------------------
+# patch test: affine displacement fields are reproduced exactly
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dim", [2, 3])
+def test_patch_affine_displacement_exact(dim):
+    """P1 elasticity with full-boundary Dirichlet data from an affine field
+    u(x) = A x + b reproduces that field to machine precision (constant
+    strain, zero body force — the classical patch test)."""
+    rng = np.random.default_rng(0)
+    mesh = structured_mesh((3,) * dim)
+    nn = mesh.n_nodes
+    A = rng.standard_normal((dim, dim))
+    b = rng.standard_normal(dim)
+    u_aff = (mesh.coords @ A.T + b).reshape(-1)  # node-blocked DOFs
+
+    Ke = np.asarray(p1_elasticity_stiffness(mesh.coords, mesh.elems,
+                                            lam=1.3, mu=0.7))
+    K = assemble_scipy_csr(nn * dim, element_dofs(mesh.elems, dim), Ke)
+
+    on_bnd = np.any((mesh.coords == 0.0) | (mesh.coords == 1.0), axis=1)
+    bnd_dofs = (np.flatnonzero(on_bnd)[:, None] * dim
+                + np.arange(dim)).reshape(-1)
+    free = np.setdiff1d(np.arange(nn * dim), bnd_dofs)
+
+    import scipy.sparse.linalg as spla
+
+    u = np.zeros(nn * dim)
+    u[bnd_dofs] = u_aff[bnd_dofs]
+    rhs = -K[free][:, bnd_dofs] @ u[bnd_dofs]  # zero body force
+    u[free] = spla.spsolve(K[free][:, free].tocsc(), rhs)
+    np.testing.assert_allclose(u, u_aff, rtol=0,
+                               atol=1e-10 * np.abs(u_aff).max())
+
+
+@pytest.mark.parametrize("dim", [2, 3])
+def test_affine_fields_have_zero_interior_residual(dim):
+    """K u_affine vanishes at interior DOFs (constant stress ⇒ zero
+    internal force away from the boundary)."""
+    mesh = structured_mesh((3,) * dim)
+    Ke = np.asarray(p1_elasticity_stiffness(mesh.coords, mesh.elems))
+    K = assemble_scipy_csr(mesh.n_nodes * dim,
+                           element_dofs(mesh.elems, dim), Ke)
+    rng = np.random.default_rng(1)
+    u_aff = (mesh.coords @ rng.standard_normal((dim, dim)).T
+             + rng.standard_normal(dim)).reshape(-1)
+    r = K @ u_aff
+    interior = ~np.any((mesh.coords == 0.0) | (mesh.coords == 1.0), axis=1)
+    int_dofs = (np.flatnonzero(interior)[:, None] * dim
+                + np.arange(dim)).reshape(-1)
+    np.testing.assert_allclose(r[int_dofs], 0.0, atol=1e-12)
+
+
+# --------------------------------------------------------------------------
+# kernel property: K_i R_i = 0 and the regularization is exact
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("prob_fixture", ["ela2d", "ela3d"])
+def test_property_kernel_annihilated_per_subdomain(prob_fixture, request):
+    """‖K_i R_i‖ ≤ 1e-10 for every subdomain's rigid-body basis, and the
+    basis is orthonormal with the right dimension."""
+    prob = request.getfixturevalue(prob_fixture)
+    k = prob.kernel_dim
+    assert k == (3 if prob.dim == 2 else 6)
+    for sd in prob.subdomains:
+        assert sd.R.shape == (sd.n, k)
+        assert np.abs(sd.K @ sd.R).max() <= 1e-10
+        np.testing.assert_allclose(sd.R.T @ sd.R, np.eye(k), atol=1e-12)
+        # kernel dimension is exactly k: K is SPSD with k zero eigenvalues
+        w = np.linalg.eigvalsh(sd.K)
+        assert w[k - 1] < 1e-10 < w[k]
+
+
+@pytest.mark.parametrize("prob_fixture", ["ela2d", "ela3d"])
+def test_fixing_dofs_regularization_exact_generalized_inverse(
+        prob_fixture, request):
+    """R[fixing_dofs] is invertible (the 3-2-1 fixture), K_reg is SPD, and
+    K K_reg⁻¹ K == K — the exactness FETI's K⁺ relies on."""
+    prob = request.getfixturevalue(prob_fixture)
+    sd = prob.subdomains[0]
+    Rf = sd.R[sd.fixing_dofs]
+    assert Rf.shape == (prob.kernel_dim, prob.kernel_dim)
+    assert np.abs(np.linalg.det(Rf)) > 1e-8
+    Kreg = fixing_dofs_regularization(sd.K, sd.fixing_dofs)
+    w = np.linalg.eigvalsh(Kreg)
+    assert w[0] > 1e-10
+    KpK = sd.K @ np.linalg.solve(Kreg, sd.K)
+    np.testing.assert_allclose(KpK, sd.K, rtol=1e-9, atol=1e-9)
+
+
+def test_heat_kernel_basis_through_same_code():
+    """The generalized kernel_basis reproduces the heat constant."""
+    r = kernel_basis(25, "heat")
+    np.testing.assert_allclose(r, np.full((25, 1), 0.2), atol=1e-14)
+
+
+# --------------------------------------------------------------------------
+# decomposition invariants for vector DOFs
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dim,sub_grid,eps", [
+    (2, (2, 2), (3, 3)),
+    (3, (2, 2, 2), (2, 2, 2)),
+])
+def test_elasticity_decomposition_invariants(dim, sub_grid, eps):
+    prob = decompose_elasticity_problem(dim, sub_grid, eps)
+    assert prob.ndof_per_node == dim
+    n_i = prob.subdomains[0].n
+    assert n_i == dim * int(np.prod([e + 1 for e in eps]))
+
+    counts = np.zeros(prob.n_lambda + 1, dtype=int)
+    for sd in prob.subdomains:
+        used = sd.lambda_ids[: sd.m]
+        counts[used] += 1
+        assert np.all(sd.lambda_ids[sd.m:] == prob.n_lambda)
+        col_nnz = (sd.Bt[:, : sd.m] != 0).sum(axis=0)
+        assert np.all(col_nnz == 1)
+        assert np.all(sd.Bt[:, sd.m:] == 0)
+        # node-blocked dof_gids expand the node gids
+        np.testing.assert_array_equal(
+            sd.dof_gids,
+            (sd.node_gids[:, None] * dim + np.arange(dim)).reshape(-1))
+    counts = counts[:-1]
+    assert np.all((counts == 1) | (counts == 2))
+
+    # gluing rows annihilate any globally-consistent DOF field
+    u_glob = np.arange(prob.n_global_dofs, dtype=float)
+    r = np.zeros(prob.n_lambda + 1)
+    for sd in prob.subdomains:
+        np.add.at(r, sd.lambda_ids, sd.Bt.T @ u_glob[sd.dof_gids])
+    np.testing.assert_allclose(r[:-1][counts == 2], 0.0, atol=1e-9)
+
+
+# --------------------------------------------------------------------------
+# sharded elasticity (CI multidevice lane)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.multidevice
+@pytest.mark.parametrize("storage", ["dense", "packed"])
+def test_sharded_elasticity_matches_single_device(ela2d, storage):
+    """The acceptance bar: the sharded elasticity solve reproduces the
+    single-device one (same iterates) and both meet the oracle."""
+    from repro.launch.mesh import make_feti_mesh
+
+    mesh = make_feti_mesh()
+    sol_sh = FetiSolver(ela2d, CFG, mesh=mesh,
+                        storage=storage).solve(tol=1e-10)
+    sol1 = FetiSolver(ela2d, CFG, storage=storage).solve(tol=1e-10)
+    assert sol_sh.converged and sol1.converged
+    assert sol_sh.iterations == sol1.iterations
+    assert np.max(np.abs(sol_sh.u_global - sol1.u_global)) < 1e-9
+    assert _oracle_error(ela2d, sol_sh) <= 1e-8

@@ -121,4 +121,14 @@ def test_decomposition_dirichlet_rows_touch_x0_face():
 
 def test_kernel_basis_is_unit_norm():
     r = kernel_basis(16)
+    assert r.shape == (16, 1)
     assert np.isclose(np.linalg.norm(r), 1.0)
+    assert np.all(r > 0)  # the familiar +1/sqrt(n) constant
+
+
+@pytest.mark.parametrize("dim,k", [(2, 3), (3, 6)])
+def test_kernel_basis_elasticity_is_orthonormal(dim, k):
+    mesh = structured_mesh((2,) * dim)
+    R = kernel_basis(problem="elasticity", coords=mesh.coords)
+    assert R.shape == (mesh.n_nodes * dim, k)
+    np.testing.assert_allclose(R.T @ R, np.eye(k), atol=1e-12)

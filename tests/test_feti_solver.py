@@ -1,25 +1,26 @@
 """End-to-end FETI validation: the decomposed PCPG solve must reproduce the
 undecomposed global sparse solve, for 2D and 3D, implicit and explicit dual
-operators, and every SC assembly variant."""
+operators, every SC assembly variant, and both workloads (scalar heat with
+kernel dim 1, vector elasticity with rigid-body kernel dim 3/6)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import SchurAssemblyConfig
-from repro.fem import decompose_heat_problem
+from repro.fem import decompose_problem
 from repro.feti import FetiSolver
 from repro.feti.assembly import preprocess_cluster
 from repro.feti.operator import explicit_dual_apply, implicit_dual_apply
 
 
-@pytest.fixture(scope="module")
-def prob2d():
-    return decompose_heat_problem(2, (2, 2), (4, 4))
+@pytest.fixture(scope="module", params=["heat", "elasticity"])
+def prob2d(request):
+    return decompose_problem(request.param, 2, (2, 2), (4, 4))
 
 
-@pytest.fixture(scope="module")
-def prob3d():
-    return decompose_heat_problem(3, (2, 2, 1), (2, 2, 2))
+@pytest.fixture(scope="module", params=["heat", "elasticity"])
+def prob3d(request):
+    return decompose_problem(request.param, 3, (2, 2, 1), (2, 2, 2))
 
 
 def _check_against_reference(prob, sol, rtol=1e-6):
@@ -27,14 +28,14 @@ def _check_against_reference(prob, sol, rtol=1e-6):
     scale = np.abs(u_ref).max()
     np.testing.assert_allclose(sol.u_global, u_ref, atol=rtol * scale)
     # interface copies agree across subdomains
-    nn = prob.global_mesh.n_nodes
+    nn = prob.n_global_dofs
     vals = [[] for _ in range(nn)]
     for i, sd in enumerate(prob.subdomains):
-        for lid, g in enumerate(sd.node_gids):
+        for lid, g in enumerate(sd.dof_gids):
             vals[g].append(sol.u[i, lid])
     for g, vs in enumerate(vals):
         if len(vs) > 1:
-            assert np.ptp(vs) < rtol * scale * 10, f"interface jump at node {g}"
+            assert np.ptp(vs) < rtol * scale * 10, f"interface jump at DOF {g}"
 
 
 @pytest.mark.parametrize("mode", ["explicit", "implicit"])
@@ -101,7 +102,7 @@ def test_lumped_preconditioner_stays_correct_and_bounded():
     """On tiny well-conditioned heat problems the lumped preconditioner need
     not win (its payoff is on large/ill-conditioned systems), but it must
     stay correct and not blow up the iteration count."""
-    prob = decompose_heat_problem(2, (3, 3), (4, 4))
+    prob = decompose_problem("heat", 2, (3, 3), (4, 4))
     cfg = SchurAssemblyConfig(block_size=8, rhs_block_size=8)
     sol_pre = FetiSolver(prob, cfg, preconditioner="lumped").solve(tol=1e-9)
     sol_no = FetiSolver(prob, cfg, preconditioner="none").solve(tol=1e-9)
@@ -111,7 +112,7 @@ def test_lumped_preconditioner_stays_correct_and_bounded():
 
 
 def test_amortization_report():
-    prob = decompose_heat_problem(2, (2, 2), (4, 4))
+    prob = decompose_problem("heat", 2, (2, 2), (4, 4))
     solver = FetiSolver(prob, SchurAssemblyConfig(block_size=8, rhs_block_size=8))
     solver.preprocess()
     rep = solver.amortization_report(

@@ -19,7 +19,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import SchurAssemblyConfig, build_stepped_meta, shared_envelope
-from repro.fem import decompose_heat_problem
+from repro.fem import decompose_problem
 from repro.feti import FetiSolver
 from repro.feti import sharded as shlib
 from repro.feti.assembly import batched_assemble, preprocess_cluster
@@ -36,9 +36,12 @@ CFG = SchurAssemblyConfig(block_size=8, rhs_block_size=8)
 multidevice = pytest.mark.multidevice
 
 
-@pytest.fixture(scope="module")
-def prob():
-    return decompose_heat_problem(2, (2, 2), (4, 4))
+# both workloads: the sharded pipeline must reproduce the single-device
+# one with kernel dimension 1 (heat) AND > 1 (elasticity rigid bodies,
+# k = 3 → the coarse G carries 3 columns per subdomain shard)
+@pytest.fixture(scope="module", params=["heat", "elasticity"])
+def prob(request):
+    return decompose_problem(request.param, 2, (2, 2), (4, 4))
 
 
 @pytest.fixture(scope="module")
@@ -313,7 +316,7 @@ def test_sharded_coarse_problem_matches(prob, mesh, single, sharded_state):
     c1 = build_single(
         jnp.asarray(_bt_stack(prob)),
         st1.f,
-        st1.r_norm,
+        st1.R,
         st1.lambda_ids,
         nl,
     )
@@ -321,7 +324,7 @@ def test_sharded_coarse_problem_matches(prob, mesh, single, sharded_state):
         mesh,
         _relabeled_padded_bt(prob, st1, st_sh, mesh),
         st_sh.f,
-        st_sh.r_norm,
+        st_sh.R,
         st_sh.lambda_ids,
         nl,
         S_real=st_sh.S_real,
@@ -355,6 +358,15 @@ def test_sharded_solve_matches_single_device(prob, mesh, mode):
     u_ref = prob.reference_solution()
     scale = np.abs(u_ref).max()
     np.testing.assert_allclose(sol_sh.u_global, u_ref, atol=1e-6 * scale)
+
+
+@multidevice
+def test_sharded_coarse_problem_carries_kernel_columns(prob, sharded_state):
+    """G has k columns per (padded) subdomain — kernel dim > 1 for the
+    elasticity parametrization."""
+    st_sh = sharded_state
+    k = st_sh.R.shape[2]
+    assert k == (1 if prob.problem == "heat" else 3)
 
 
 @multidevice
