@@ -5,6 +5,13 @@ Approaches benchmarked (paper Table 2, mapped to this framework):
   impl            — numerical factorization only (implicit dual op)
   expl_dense      — factorization + dense §3.1 SC assembly   (= expl_cuda)
   expl_opt        — factorization + sparsity-utilizing SC    (= expl_gpu_opt)
+  expl_dirichlet  — expl_opt + the dirichlet preconditioner's primal
+                    boundary Schur stage (docs/preconditioners.md)
+
+The lumped-vs-dirichlet rows report PCPG iterations, preconditioner
+apply time, the dirichlet stage's preprocessing overhead, and the
+amortization point WITH that overhead in the numerator
+(``FetiSolver.amortization_report(t_dirichlet_s=...)``).
 
 Amortization point = preprocessing overhead / per-iteration saving
 (implicit TRSV pair vs explicit GEMV), reported per subdomain size — the
@@ -19,7 +26,12 @@ from repro.core import SchurAssemblyConfig
 from repro.fem import decompose_problem
 from repro.feti import FetiSolver
 from repro.feti.assembly import preprocess_cluster
-from repro.feti.operator import explicit_dual_apply, implicit_dual_apply
+from repro.feti.operator import (
+    dirichlet_preconditioner,
+    explicit_dual_apply,
+    implicit_dual_apply,
+    lumped_preconditioner,
+)
 from benchmarks.common import emit, fmt_bytes, time_fn
 
 
@@ -51,21 +63,32 @@ def run(cases=(("heat", 2, (2, 2), (8, 8)), ("heat", 2, (2, 2), (16, 16)),
         from repro.feti.assembly import make_cluster_preprocessor
         from repro.fem.regularization import fixing_dofs_regularization
 
-        def preprocess_time(cfg, explicit):
+        def preprocess_time(cfg, explicit, dirichlet=False):
             """Time the COMPILED preprocessing (pattern fixed, values new —
             the paper's multi-step regime)."""
             static, prep = make_cluster_preprocessor(prob, cfg,
-                                                     explicit=explicit)
+                                                     explicit=explicit,
+                                                     dirichlet=dirichlet)
             np_ = static["node_perm"]
             Kp = np.stack([
                 fixing_dofs_regularization(sd.K, sd.fixing_dofs)[np_][:, np_]
                 for sd in prob.subdomains
             ])
             Btp = np.stack([sd.Bt[np_] for sd in prob.subdomains])
-            Kj, Bj = jnp.asarray(Kp), jnp.asarray(Btp)
-            us = time_fn(lambda a, b: prep(a, b)[0 if not explicit else 1],
-                         Kj, Bj, reps=reps)
-            st = preprocess_cluster(prob, cfg, explicit=explicit)
+            args = [jnp.asarray(Kp), jnp.asarray(Btp)]
+            if dirichlet:
+                from repro.feti.dirichlet import own_boundary_masks
+
+                split = static["split"]
+                dperm = split.dperm
+                Kd = np.stack([sd.K for sd in prob.subdomains]
+                              )[:, dperm][:, :, dperm]
+                args += [jnp.asarray(Kd),
+                         jnp.asarray(own_boundary_masks(prob, split))]
+            idx = 2 if dirichlet else (1 if explicit else 0)
+            us = time_fn(lambda *a: prep(*a)[idx], *args, reps=reps)
+            st = preprocess_cluster(prob, cfg, explicit=explicit,
+                                    dirichlet=dirichlet)
             return st, us
 
         import dataclasses
@@ -106,6 +129,35 @@ def run(cases=(("heat", 2, (2, 2), (8, 8)), ("heat", 2, (2, 2), (16, 16)),
         sol = FetiSolver(prob, cfg_opt).solve(tol=1e-8, max_iter=500)
         rows.append((f"feti/{tag}/pcpg_iterations", float(sol.iterations),
                      f"converged={sol.converged}"))
+
+        # ---- lumped vs dirichlet preconditioner (ISSUE 5) ----
+        st_dir, t_expl_dir = preprocess_time(cfg_opt, explicit=True,
+                                             dirichlet=True)
+        t_dir_stage = t_expl_dir - t_expl_opt  # the stage's extra cost
+        apply_l = jax.jit(lambda w: lumped_preconditioner(
+            st_expl.K, st_expl.Btp, st_expl.lambda_ids, nl, w))
+        apply_d = jax.jit(lambda w: dirichlet_preconditioner(
+            st_dir.Sb, st_dir.Btb, st_dir.lambda_ids, nl, w))
+        t_ap_l = time_fn(apply_l, lam, reps=reps)
+        t_ap_d = time_fn(apply_d, lam, reps=reps)
+        solver_dir = FetiSolver(prob, cfg_opt, preconditioner="dirichlet")
+        sol_dir = solver_dir.solve(tol=1e-8, max_iter=500)
+        rep = solver_dir.amortization_report(
+            t_assembly_s=(t_expl_opt - t_impl) * 1e-6,
+            t_implicit_iter_s=t_it_imp * 1e-6,
+            t_explicit_iter_s=t_it_exp * 1e-6,
+            t_dirichlet_s=t_dir_stage * 1e-6,
+        )
+        rows.append((f"feti/{tag}/precond_lumped", t_ap_l,
+                     f"pcpg_iters={sol.iterations}"))
+        rows.append((
+            f"feti/{tag}/precond_dirichlet", t_ap_d,
+            f"pcpg_iters={sol_dir.iterations};"
+            f"iter_saving_vs_lumped={sol.iterations - sol_dir.iterations};"
+            f"dirichlet_stage_us={t_dir_stage:.1f};"
+            f"amort_iters_with_dirichlet="
+            f"{rep['amortization_iterations']:.1f};"
+            f"Sb_bytes={st_dir.device_bytes()['Sb']}"))
     return rows
 
 

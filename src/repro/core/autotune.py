@@ -61,7 +61,10 @@ __all__ = [
 # Bump when the candidate space or the cost model changes shape: stale
 # cached plans from an older search must not be served for the new one.
 # v2: packed factor storage joined the space (storage= on every config).
-SPACE_VERSION = 2
+# v3: the assembly stage joined the cache key ("dual" | "dirichlet" —
+#     the primal boundary Schur stage of the Dirichlet preconditioner is
+#     planned and cached independently of the dual-operator stage).
+SPACE_VERSION = 3
 
 # Pallas kernels only run natively on TPU; elsewhere they fall back to
 # interpret mode, which is orders of magnitude slower. The model multiplies
@@ -339,13 +342,16 @@ def pattern_fingerprint(pivots: np.ndarray, n: int, m: int,
 
 def _cache_key(fingerprint: str, device: DeviceModel,
                block_sizes: Sequence[int], measured: bool,
-               storage: Optional[str] = None) -> str:
+               storage: Optional[str] = None,
+               stage: str = "dual") -> str:
     # `measured` is part of the key: a model-only plan must never be served
     # to a measure="auto" caller (it would silently skip the measured
     # refinement and its never-slower-than-dense guarantee), nor vice versa.
-    # `storage` restrictions likewise search a different space.
+    # `storage` restrictions likewise search a different space, and `stage`
+    # separates the dual-operator assembly from the Dirichlet primal Schur
+    # assembly even if their pattern fingerprints ever collided.
     h = hashlib.sha256()
-    h.update(f"v{SPACE_VERSION}:{device.kind}:{fingerprint}:"
+    h.update(f"v{SPACE_VERSION}:{device.kind}:{stage}:{fingerprint}:"
              f"{int(measured)}:{storage or 'any'}:".encode())
     h.update(",".join(str(b) for b in sorted(block_sizes)).encode())
     return h.hexdigest()
@@ -494,6 +500,7 @@ def plan_from_builder(
     cache: bool = True,
     reps: int = 5,
     storage: Optional[str] = None,
+    stage: str = "dual",
 ) -> Plan:
     """Core search: builder-parameterized so the cluster path can score the
     true *envelope* metadata it will execute with (see feti.assembly).
@@ -505,6 +512,11 @@ def plan_from_builder(
     ``storage`` restricts the search to one factor layout ("dense" |
     "packed"); ``None`` searches both and the winning plan's
     ``cfg.storage`` records the choice.
+
+    ``stage`` names which assembly the plan is for — "dual" (the B̃ᵀ-RHS
+    dual-operator SC) or "dirichlet" (the K_ib-RHS primal boundary Schur
+    of :mod:`repro.feti.dirichlet`). It only enters the cache key: the
+    candidate space and cost model are shared, the sparsity inputs differ.
     """
     if measure not in ("auto", "never", "model"):
         raise ValueError(f"measure must be auto|never|model, got {measure!r}")
@@ -516,7 +528,8 @@ def plan_from_builder(
         block_sizes = default_block_sizes(n)
 
     key = _cache_key(fingerprint, device, block_sizes,
-                     measured=(measure == "auto"), storage=storage)
+                     measured=(measure == "auto"), storage=storage,
+                     stage=stage)
     if cache:
         hit = _load_cached(key)
         if hit is not None:

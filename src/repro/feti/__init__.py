@@ -7,7 +7,13 @@ the end-to-end solver with amortization accounting (paper §5).
 subdomain axis over a ``("data",)`` device mesh; pass ``mesh=`` to
 :class:`FetiSolver` / :func:`preprocess_cluster` to use it."""
 from repro.feti.assembly import ClusterState, preprocess_cluster
+from repro.feti.dirichlet import (
+    BoundaryInteriorSplit,
+    assemble_dirichlet_schur,
+    boundary_interior_split,
+)
 from repro.feti.operator import (
+    dirichlet_preconditioner,
     dual_rhs,
     explicit_dual_apply,
     implicit_dual_apply,
@@ -18,12 +24,16 @@ from repro.feti.projector import CoarseProblem, build_coarse_problem
 from repro.feti.solver import FetiSolution, FetiSolver
 
 __all__ = [
+    "BoundaryInteriorSplit",
     "ClusterState",
     "CoarseProblem",
     "FetiSolution",
     "FetiSolver",
     "PCPGResult",
+    "assemble_dirichlet_schur",
+    "boundary_interior_split",
     "build_coarse_problem",
+    "dirichlet_preconditioner",
     "dual_rhs",
     "preprocess_cluster",
     "explicit_dual_apply",

@@ -36,13 +36,13 @@ from repro.core.stepped import SteppedMeta
 from repro.fem.decomposition import FetiProblem
 from repro.fem.meshgen import structured_mesh
 from repro.fem.regularization import fixing_dofs_regularization
+from repro.feti import dirichlet as dirlib
 from repro.feti import sharded as shlib
 from repro.sparse import (
     block_pattern,
     block_symbolic_cholesky,
     matrix_pattern_from_elems,
-    nested_dissection_order,
-    rcm_order,
+    node_ordering,
 )
 from repro.sparse.cholesky import block_cholesky
 from repro.sparse.packed import (
@@ -110,9 +110,19 @@ class ClusterState:
     mesh: Optional[jax.sharding.Mesh] = None  # set => stacks sharded over it
     n_real: Optional[int] = None  # subdomain count before mesh padding
     relabeled: bool = False  # multiplier columns in stepped (relabeled) order
-    # the compiled (Kp_stack, Btp_stack) -> (L, F) preprocessor, for the
-    # multi-step regime: new values, same pattern, zero recompiles
+    # the compiled (Kp_stack, Btp_stack[, Kd_stack, Zb_stack]) ->
+    # (L, F[, Sb]) preprocessor, for the multi-step regime: new values,
+    # same pattern, zero recompiles (the extra inputs/Sb output exist iff
+    # dirichlet=True; Zb is the own-boundary mask stack)
     prep: Optional[Callable] = None
+    # ---- Dirichlet preconditioner stage (dirichlet=True), else None ----
+    split: Optional[dirlib.BoundaryInteriorSplit] = None
+    Sb: Optional[jax.Array] = None  # (S, n_b, n_b) primal boundary SCs
+    Btb: Optional[jax.Array] = None  # (S, n_b, m_max) boundary rows of B̃ᵀ
+    dirichlet_cfg: Optional[SchurAssemblyConfig] = None
+    dirichlet_plan: Optional[Plan] = None  # when cfg was "auto", else None
+    dirichlet_env: Optional[SteppedMeta] = None  # K_ib stepped metadata
+    dirichlet_mask: Optional[np.ndarray] = None  # interior block fill mask
 
     @property
     def n_lambda(self) -> int:
@@ -155,10 +165,13 @@ class ClusterState:
             "K": nbytes(self.K),
             "Btp": nbytes(self.Btp),
             "F": nbytes(self.F),
+            "Sb": nbytes(self.Sb),
+            "Btb": nbytes(self.Btb),
             "dense_L": dense_one,
             "dense_K": dense_one,
         }
-        out["total"] = out["L"] + out["K"] + out["Btp"] + out["F"]
+        out["total"] = (out["L"] + out["K"] + out["Btp"] + out["F"]
+                        + out["Sb"] + out["Btb"])
         return out
 
 
@@ -203,6 +216,7 @@ def make_cluster_preprocessor(
     plan_cache: bool = True,
     mesh=None,
     storage: Optional[str] = None,
+    dirichlet: bool = False,
 ):
     """Build the COMPILED preprocessing function for one decomposition.
 
@@ -219,6 +233,16 @@ def make_cluster_preprocessor(
     content-addressed on the sparsity pattern + device kind. ``measure``
     and ``plan_cache`` are forwarded to :func:`plan_from_builder`.
 
+    ``dirichlet=True`` grows a second assembly stage: the primal
+    boundary/interior Schur complements S_b = K_bb − K_bi K_ii⁻¹ K_ib of
+    the Dirichlet preconditioner (:mod:`repro.feti.dirichlet`), assembled
+    through the same :func:`repro.core.schur.make_assembler` machinery
+    and finished by the per-subdomain own-boundary restriction. ``prep``
+    then takes ``(Kd_stack, Zb_stack)`` extra inputs (unregularized K in
+    the split's ``dperm`` order + the (S, n_b) own-boundary masks) and
+    returns ``(L, F, Sb)``; with ``cfg="auto"`` the stage gets its own
+    independently-cached plan (``stage="dirichlet"`` in the cache key).
+
     With ``mesh`` set, ``prep`` expects subdomain-sharded stacks whose
     multiplier columns are already relabeled into each subdomain's stepped
     order (:func:`repro.feti.sharded.relabel_columns`) and runs
@@ -234,17 +258,11 @@ def make_cluster_preprocessor(
     node_shape = tuple(e + 1 for e in problem.elems_per_sub)
 
     # ---- symbolic phase (host, shared by all subdomains) ----
-    if ordering == "nd":
-        nperm = nested_dissection_order(node_shape)
-    elif ordering == "rcm":
-        nperm = rcm_order(node_shape)
-    elif ordering == "natural":
-        nperm = np.arange(n_nodes, dtype=np.int64)
-    else:
-        raise ValueError(f"unknown ordering {ordering!r}")
+    nperm = node_ordering(node_shape, ordering)
 
     lmesh = structured_mesh(problem.elems_per_sub)
-    npat = matrix_pattern_from_elems(n_nodes, lmesh.elems)[nperm][:, nperm]
+    npat0 = matrix_pattern_from_elems(n_nodes, lmesh.elems)
+    npat = npat0[nperm][:, nperm]
     # vector problems: node-blocked DOFs stay adjacent under the expanded
     # permutation, and the DOF pattern is the node pattern with every
     # entry blown up to an (ndpn, ndpn) block — the natural stress case
@@ -252,6 +270,21 @@ def make_cluster_preprocessor(
     node_perm = expand_node_perm(nperm, ndpn)
     kpat = expand_node_pattern(npat, ndpn)
     patterns = [sd.Bt[node_perm] != 0 for sd in subs]
+
+    # ---- Dirichlet stage symbolic phase (shared split + K_ib metadata) ----
+    split = None
+    kpat0 = None
+    _dbuilt: dict = {}
+    if dirichlet:
+        split = dirlib.boundary_interior_split(problem, ordering=ordering)
+        kpat0 = expand_node_pattern(npat0, ndpn)  # original DOF order
+
+    def _dsymbolic(bs: int, rbs: int):
+        key = (bs, rbs)
+        if key not in _dbuilt:
+            _dbuilt[key] = dirlib.dirichlet_symbolic(
+                problem, split, bs, rbs, kpat=kpat0)
+        return _dbuilt[key]
 
     # builder used both by the autotuner (scoring candidate block sizes)
     # and below to materialize the symbolic products for the final cfg;
@@ -271,7 +304,8 @@ def make_cluster_preprocessor(
         return _built[key]
 
     plan = None
-    if isinstance(cfg, str):
+    was_auto = isinstance(cfg, str)
+    if was_auto:
         if cfg != "auto":
             raise ValueError("cfg must be a SchurAssemblyConfig or 'auto', "
                              f"got {cfg!r}")
@@ -294,8 +328,29 @@ def make_cluster_preprocessor(
 
         cfg = _dc.replace(cfg, storage=storage)
 
+    # the dirichlet stage's plan: searched (and cached) independently of
+    # the dual stage's — its RHS pattern (K_ib) and factor structure
+    # (interior fill mask) are different inputs to the same design space
+    d_plan = None
+    d_cfg = None
+    if dirichlet:
+        if was_auto and split.n_i > 0:
+            d_plan = plan_from_builder(
+                _dsymbolic,
+                dirlib.dirichlet_fingerprint(problem, split, kpat=kpat0),
+                n_hint=split.n_i, measure=measure, cache=plan_cache,
+                storage=storage, stage="dirichlet")
+            d_cfg = d_plan.cfg
+        else:
+            d_cfg = cfg  # shares the dual stage's (resolved) config
+
     metas, env, block_mask = _symbolic(cfg.block_size, cfg.rhs_bs)
     index = PackedBlockIndex.from_mask(block_mask, n, cfg.block_size)
+    meta_ib = mask_ii = d_assemble = None
+    if dirichlet:
+        meta_ib, mask_ii = _dsymbolic(d_cfg.block_size, d_cfg.rhs_bs)
+        d_assemble = dirlib.make_dirichlet_assembler(
+            split, meta_ib, mask_ii, d_cfg)
     col_perms = np.empty((S, m_max), dtype=np.int64)
     inv_col_perms = np.empty((S, m_max), dtype=np.int64)
     for i, me in enumerate(metas):
@@ -316,38 +371,63 @@ def make_cluster_preprocessor(
 
     if mesh is None:
 
-        def prep(Kp_stack, Btp_stack):
-            L = _factorize(Kp_stack)
-            if not explicit:
-                return L, None
-            F = batched_assemble(L, Btp_stack, cp, icp, env, cfg, block_mask)
-            return L, F
+        if dirichlet:
+
+            def prep(Kp_stack, Btp_stack, Kd_stack, Zb_stack):
+                L = _factorize(Kp_stack)
+                F = (batched_assemble(L, Btp_stack, cp, icp, env, cfg,
+                                      block_mask) if explicit else None)
+                Sb = jax.vmap(d_assemble)(Kd_stack)
+                Sb = jax.vmap(dirlib.restrict_own_boundary)(Sb, Zb_stack)
+                return L, F, Sb
+
+        else:
+
+            def prep(Kp_stack, Btp_stack):
+                L = _factorize(Kp_stack)
+                if not explicit:
+                    return L, None
+                F = batched_assemble(L, Btp_stack, cp, icp, env, cfg,
+                                     block_mask)
+                return L, F
 
     else:
         from jax.sharding import PartitionSpec as P
 
-        def _local(Kp_l, Btp_l):
-            L_l = _factorize(Kp_l)
-            if not explicit:
-                return (L_l,)
-            # columns were relabeled host-side: the col_perm=None fast path
-            F_l = batched_assemble(L_l, Btp_l, None, None, env, cfg,
-                                   block_mask)
-            return (L_l, F_l)
+        def _local(Kp_l, Btp_l, *dir_l):
+            outs = [_factorize(Kp_l)]
+            if explicit:
+                # columns were relabeled host-side: col_perm=None fast path
+                outs.append(batched_assemble(outs[0], Btp_l, None, None,
+                                             env, cfg, block_mask))
+            if dirichlet:
+                Kd_l, Zb_l = dir_l
+                Sb_l = jax.vmap(d_assemble)(Kd_l)
+                outs.append(
+                    jax.vmap(dirlib.restrict_own_boundary)(Sb_l, Zb_l))
+            return tuple(outs)
 
-        n_out = 2 if explicit else 1
+        n_in = 4 if dirichlet else 2
+        n_out = 1 + int(explicit) + int(dirichlet)
 
-        def prep(Kp_stack, Btp_stack):
+        def prep(Kp_stack, Btp_stack, *dir_stacks):
             outs = shlib.shard_map(
                 _local, mesh=mesh,
-                in_specs=(P(shlib.AXIS), P(shlib.AXIS)),
+                in_specs=(P(shlib.AXIS),) * n_in,
                 out_specs=(P(shlib.AXIS),) * n_out,
-            )(Kp_stack, Btp_stack)
-            return outs if explicit else (outs[0], None)
+            )(Kp_stack, Btp_stack, *dir_stacks)
+            it = iter(outs)
+            L = next(it)
+            F = next(it) if explicit else None
+            if dirichlet:
+                return L, F, next(it)
+            return L, F
 
     static = dict(node_perm=node_perm, block_mask=block_mask, env=env,
                   col_perm=cp, inv_col_perm=icp, cfg=cfg, plan=plan,
-                  index=index)
+                  index=index, split=split, dirichlet_cfg=d_cfg,
+                  dirichlet_plan=d_plan, dirichlet_env=meta_ib,
+                  dirichlet_mask=mask_ii)
     return static, jax.jit(prep)
 
 
@@ -361,6 +441,7 @@ def preprocess_cluster(
     plan_cache: bool = True,
     mesh=None,
     storage: Optional[str] = None,
+    dirichlet: bool = False,
 ) -> ClusterState:
     """Paper §2.2 'preprocessing': factorize every K_i and (if explicit)
     assemble every F̃ᵢ with the sparsity-utilizing pipeline.
@@ -377,6 +458,13 @@ def preprocess_cluster(
     unregularized K kept for the lumped preconditioner is ALWAYS packed —
     no dense (S, n, n) K survives preprocessing in either mode.
 
+    ``dirichlet=True`` additionally assembles (inside the same compiled
+    program) the per-subdomain primal boundary Schur complements
+    S_b = K_bb − K_bi K_ii⁻¹ K_ib of the Dirichlet preconditioner
+    (:mod:`repro.feti.dirichlet`); the state then carries ``Sb``, the
+    boundary-row B̃ᵀ slice ``Btb``, the boundary/interior ``split`` and
+    the stage's own resolved config/plan.
+
     Pass ``mesh`` (``("data",)`` axis, :func:`repro.launch.mesh.
     make_feti_mesh`) to shard the subdomain axis over devices: multipliers
     are relabeled to stepped column order host-side, the cluster is padded
@@ -387,19 +475,31 @@ def preprocess_cluster(
     S = len(subs)
     static, prep = make_cluster_preprocessor(
         problem, cfg, explicit, ordering, measure=measure,
-        plan_cache=plan_cache, mesh=mesh, storage=storage)
+        plan_cache=plan_cache, mesh=mesh, storage=storage,
+        dirichlet=dirichlet)
     cfg = static["cfg"]  # resolved when "auto"/storage override was passed
     node_perm = static["node_perm"]
     index: PackedBlockIndex = static["index"]
+    split = static["split"]
 
     Kreg = np.stack(
         [fixing_dofs_regularization(sd.K, sd.fixing_dofs) for sd in subs]
     )
     Kp = Kreg[:, node_perm][:, :, node_perm]
     Btp = np.stack([sd.Bt[node_perm] for sd in subs])
+    K_stack = np.stack([sd.K for sd in subs])  # unregularized, shared below
+    Kd = Btb = Zb = None
+    if dirichlet:
+        # the dirichlet stage eliminates against the UNREGULARIZED K:
+        # K_ii is SPD outright (boundary nonempty pins the kernel) and the
+        # fixing-DOF diagonal shift would perturb S_b on boundary entries
+        dperm = split.dperm
+        Kd = K_stack[:, dperm][:, :, dperm]
+        Btb = np.stack([sd.Bt[split.boundary] for sd in subs])
+        Zb = dirlib.own_boundary_masks(problem, split)
     # the lumped preconditioner's K: unregularized, permuted like the
     # factor so it shares Btp — packed host-side into the fill-mask layout
-    K_perm = np.stack([sd.K for sd in subs])[:, node_perm][:, :, node_perm]
+    K_perm = K_stack[:, node_perm][:, :, node_perm]
     f = np.stack([sd.f for sd in subs])
     lam = np.stack([sd.lambda_ids for sd in subs])
 
@@ -422,6 +522,13 @@ def preprocess_cluster(
         Btp = shlib.pad_stack(Btp, S_pad)
         K_perm = shlib.pad_stack(K_perm, S_pad)
         f = shlib.pad_stack(f, S_pad)
+        if dirichlet:
+            # dummy subdomains: identity K (factorizable interior, S_b = I)
+            # glued to nothing (zero Btb, zero own-boundary mask), so they
+            # contribute nothing
+            Kd = shlib.pad_stack(Kd, S_pad, identity=True)
+            Btb = shlib.pad_stack(shlib.relabel_columns(Btb, cp_np), S_pad)
+            Zb = shlib.pad_stack(Zb, S_pad)
         pad_ids = np.full((S_pad - S, lam.shape[1]), problem.n_lambda,
                           lam.dtype)
         lam = np.concatenate([lam, pad_ids], axis=0)
@@ -435,7 +542,12 @@ def preprocess_cluster(
 
     Kp_j = to_dev(Kp)
     Btp_j = to_dev(Btp)
-    L, F = prep(Kp_j, Btp_j)
+    Sb = Btb_j = None
+    if dirichlet:
+        Btb_j = to_dev(Btb)
+        L, F, Sb = prep(Kp_j, Btp_j, to_dev(Kd), to_dev(Zb))
+    else:
+        L, F = prep(Kp_j, Btp_j)
 
     # pack K host-side (numpy blocks), then place/shard only the values
     K_vals = np.asarray(index.pack(jnp.asarray(K_perm, dtype=dtype)))
@@ -465,4 +577,11 @@ def preprocess_cluster(
         n_real=S if mesh is not None else None,
         relabeled=mesh is not None,
         prep=prep,
+        split=split,
+        Sb=Sb,
+        Btb=Btb_j,
+        dirichlet_cfg=static["dirichlet_cfg"],
+        dirichlet_plan=static["dirichlet_plan"],
+        dirichlet_env=static["dirichlet_env"],
+        dirichlet_mask=static["dirichlet_mask"],
     )

@@ -29,9 +29,11 @@ from repro.sparse.packed import (
 __all__ = [
     "gather_local",
     "scatter_dual",
+    "local_dual_apply",
     "explicit_dual_apply",
     "implicit_dual_apply",
     "lumped_preconditioner",
+    "dirichlet_preconditioner",
     "dual_rhs",
     "solve_with_factor",
     "apply_stiffness",
@@ -50,12 +52,26 @@ def scatter_dual(vals: jax.Array, lambda_ids: jax.Array, n_lambda: int) -> jax.A
     return out.at[lambda_ids].add(vals)[:-1]
 
 
+def local_dual_apply(apply_local, lambda_ids: jax.Array, n_lambda: int,
+                     lam: jax.Array) -> jax.Array:
+    """The λ-space sandwich every dual-side operator shares:
+    gather(λ) → per-subdomain local apply → scatter-add back into λ space.
+
+    ``apply_local`` maps the (S, m_max) gathered local multiplier blocks to
+    (S, m_max) results; the gather/scatter pair around it is the algebraic
+    form of the paper's MPI neighbour exchange. The explicit dual operator
+    and both preconditioners are instances — only the per-subdomain GEMV
+    stack in the middle differs.
+    """
+    return scatter_dual(apply_local(gather_local(lam, lambda_ids)),
+                        lambda_ids, n_lambda)
+
+
 def explicit_dual_apply(F: jax.Array, lambda_ids: jax.Array, n_lambda: int,
                         lam: jax.Array) -> jax.Array:
     """q = Σᵢ B̃ᵢᵀ-scatter( F̃ᵢ · gather(λ) )   (paper eq. 12)."""
-    p_loc = gather_local(lam, lambda_ids)
-    q_loc = jnp.einsum("sab,sb->sa", F, p_loc)
-    return scatter_dual(q_loc, lambda_ids, n_lambda)
+    return local_dual_apply(
+        lambda p: jnp.einsum("sab,sb->sa", F, p), lambda_ids, n_lambda, lam)
 
 
 def _tri_solve(L, b, transpose):
@@ -101,16 +117,45 @@ def lumped_preconditioner(K, Bt: jax.Array, lambda_ids: jax.Array,
                           n_lambda: int, w: jax.Array) -> jax.Array:
     """Lumped FETI preconditioner: M⁻¹ ≈ Σᵢ B̃ᵢ Kᵢ B̃ᵢᵀ.
 
+    The cheap special case of the Dirichlet sandwich below with the FULL
+    stiffness K standing in for the boundary Schur complement S_b (lumping
+    the interior contribution instead of eliminating it — zero extra
+    preprocessing, weaker spectral equivalence; docs/preconditioners.md).
+
     ``K`` is the unregularized stiffness stack — dense, or packed in the
     factor's block layout (the form :func:`repro.feti.assembly.
     preprocess_cluster` stores: no dense (S, n, n) K survives preprocessing).
     ``Bt`` must share K's row order (the factor order when K is packed).
     """
-    p_loc = gather_local(w, lambda_ids)
-    v = jnp.einsum("snm,sm->sn", Bt, p_loc)
-    v = apply_stiffness(K, v)
-    q_loc = jnp.einsum("snm,sn->sm", Bt, v)
-    return scatter_dual(q_loc, lambda_ids, n_lambda)
+
+    def apply_local(p):
+        v = jnp.einsum("snm,sm->sn", Bt, p)
+        v = apply_stiffness(K, v)
+        return jnp.einsum("snm,sn->sm", Bt, v)
+
+    return local_dual_apply(apply_local, lambda_ids, n_lambda, w)
+
+
+def dirichlet_preconditioner(Sb: jax.Array, Btb: jax.Array,
+                             lambda_ids: jax.Array, n_lambda: int,
+                             w: jax.Array) -> jax.Array:
+    """Dirichlet FETI preconditioner: M⁻¹ = Σᵢ B̃ᵢ S_b,i B̃ᵢᵀ with the
+    *primal* boundary Schur complement S_b = K_bb − K_bi K_ii⁻¹ K_ib
+    assembled per subdomain by :mod:`repro.feti.dirichlet`.
+
+    ``Sb`` is the dense (S, n_b, n_b) stack; ``Btb`` is the boundary-row
+    slice of B̃ᵀ, (S, n_b, m_max) — B̃ᵀ has no interior rows by
+    construction of the split, so the restriction loses nothing. The apply
+    is gather → restrict to boundary → dense GEMV against S_b → expand →
+    scatter, the preconditioner mirror of :func:`explicit_dual_apply`.
+    """
+
+    def apply_local(p):
+        v = jnp.einsum("sbm,sm->sb", Btb, p)
+        v = jnp.einsum("sab,sb->sa", Sb, v)
+        return jnp.einsum("sbm,sb->sm", Btb, v)
+
+    return local_dual_apply(apply_local, lambda_ids, n_lambda, w)
 
 
 def dual_rhs(L, Btp: jax.Array, fp: jax.Array,

@@ -6,6 +6,15 @@ heat (the normalized constant), k = 3/6 for 2D/3D elasticity (rigid-body
 modes). Each subdomain contributes k columns to G, so G is
 (n_lambda, S·k), GᵀG is the (S·k, S·k) block Gram matrix, and α is the
 flattened (S·k,) vector of kernel coefficients.
+
+The triangular coarse factor comes from a **QR of G** (R from ``qr(G)``
+IS the Cholesky factor of GᵀG up to row signs), not from forming GᵀG and
+factorizing it: squaring the condition number plus the stabilizing jitter
+the squared form needed put an ≈1e-10 relative floor under the attainable
+PCPG residual — exactly the elasticity convergence floor PR 4 pinned its
+test grids around. With the QR factor the floor drops by orders of
+magnitude and tight (1e-10) dual tolerances become reachable on larger
+elasticity problems (see docs/preconditioners.md §Floor).
 """
 from __future__ import annotations
 
@@ -14,7 +23,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-__all__ = ["CoarseProblem", "build_coarse_problem", "coarse_g_e"]
+__all__ = ["CoarseProblem", "build_coarse_problem", "coarse_g_e",
+           "coarse_factor"]
 
 
 def coarse_g_e(Bt: jax.Array, f: jax.Array, R: jax.Array,
@@ -36,10 +46,51 @@ def coarse_g_e(Bt: jax.Array, f: jax.Array, R: jax.Array,
     return G, e
 
 
+def coarse_factor(G: jax.Array) -> jax.Array:
+    """Lower-triangular factor L with L Lᵀ = GᵀG, computed as Rᵀ from the
+    QR of G (never forming GᵀG — no condition-number squaring, no jitter).
+
+    Row signs are normalized so the diagonal is positive (the genuine
+    Cholesky factor). Rank safety, replacing what the old GᵀG jitter
+    bought without its accuracy cost: structurally-zero columns of G (the
+    inert padding subdomains of the sharded deployment) give exact zero R
+    diagonals that are replaced by 1, so their α components come out
+    exactly zero through both triangular solves; *numerically* dependent
+    columns (a rank-deficient coarse problem) give ~eps-sized diagonals
+    that are clamped to 1e-12 of the largest pivot, keeping the solve
+    bounded like the old jittered Gram factor did. Fewer rows than
+    columns (more kernel columns than multipliers — degenerate but legal)
+    is handled by zero-row padding, which leaves GᵀG unchanged and lets
+    the clamp absorb the missing rank.
+    """
+    n_rows, ncols = G.shape
+    if n_rows < ncols:
+        G = jnp.concatenate(
+            [G, jnp.zeros((ncols - n_rows, ncols), G.dtype)])
+    Rq = jnp.linalg.qr(G, mode="r")
+    diag = jnp.diagonal(Rq)
+    # rank guard with the old jitter's floor, applied ONLY to degenerate
+    # pivots: healthy ones pass through bit-unchanged (so the old
+    # jitter's ≈1e-10 residual floor stays gone), while zero/eps-sized
+    # ones get the sqrt(1e-12·trace(GᵀG)/ncols) pivot the jittered Gram
+    # factor would have had — rank-deficient coarse solves stay bounded,
+    # and trailing zero (padding) columns still yield exactly-zero α
+    # (their R rows/columns are exact zeros for any pivot value).
+    floor2 = 1e-12 * jnp.sum(G * G) / ncols
+    floor2 = jnp.where(floor2 == 0.0, 1.0, floor2)
+    safe = jnp.where(
+        diag * diag < floor2,
+        jnp.sqrt(floor2) * jnp.where(diag < 0, -1.0, 1.0), diag)
+    idx = jnp.arange(ncols)
+    Rq = Rq.at[idx, idx].set(safe)
+    sign = jnp.sign(jnp.diagonal(Rq))
+    return (Rq * sign[:, None]).T
+
+
 @dataclasses.dataclass
 class CoarseProblem:
     G: jax.Array  # (n_lambda, S·k)
-    GtG_chol: jax.Array  # (S·k, S·k) Cholesky factor of GᵀG
+    GtG_chol: jax.Array  # (S·k, S·k) lower factor of GᵀG (QR-derived)
     e: jax.Array  # (S·k,) = Rᵀf, subdomain-major
 
     def solve_coarse(self, b: jax.Array) -> jax.Array:
@@ -71,8 +122,4 @@ def build_coarse_problem(Bt: jax.Array, f: jax.Array, R: jax.Array,
     original-order B̃ᵀ and R.
     """
     G, e = coarse_g_e(Bt, f, R, lambda_ids, n_lambda)
-    ncols = G.shape[1]
-    GtG = G.T @ G
-    # tiny jitter for the (rare) case of exactly-singular coarse problems
-    GtG = GtG + 1e-12 * jnp.trace(GtG) / ncols * jnp.eye(ncols, dtype=Bt.dtype)
-    return CoarseProblem(G=G, GtG_chol=jnp.linalg.cholesky(GtG), e=e)
+    return CoarseProblem(G=G, GtG_chol=coarse_factor(G), e=e)

@@ -40,7 +40,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.feti import operator as op
-from repro.feti.projector import CoarseProblem, coarse_g_e
+from repro.feti.projector import CoarseProblem, coarse_factor, coarse_g_e
 
 try:  # jax >= 0.4.35 re-exports shard_map from the top level
     shard_map = jax.shard_map
@@ -52,6 +52,7 @@ __all__ = [
     "ShardedCoarseProblem",
     "build_coarse_problem",
     "data_sharding",
+    "dirichlet_preconditioner",
     "dual_rhs",
     "explicit_dual_apply",
     "implicit_dual_apply",
@@ -206,6 +207,35 @@ def lumped_preconditioner(
     )(K, Bt, lambda_ids, w)
 
 
+def dirichlet_preconditioner(
+    mesh: Mesh,
+    Sb: jax.Array,
+    Btb: jax.Array,
+    lambda_ids: jax.Array,
+    n_lambda: int,
+    w: jax.Array,
+) -> jax.Array:
+    """Dirichlet preconditioner M⁻¹ = Σᵢ B̃ᵢ S_b,i B̃ᵢᵀ, Σ as psum.
+
+    ``Sb`` (the per-subdomain primal boundary Schur complements) and the
+    boundary-row B̃ᵀ slice ``Btb`` are carried under the same ``P(AXIS)``
+    specs as the explicit SC stack — padded dummy subdomains have zero
+    ``Btb``, so whatever their (identity-padded) S_b is, they contribute
+    exactly nothing to the psum.
+    """
+
+    def body(Sb_l, Bb_l, ids_l, w_r):
+        q = op.dirichlet_preconditioner(Sb_l, Bb_l, ids_l, n_lambda, w_r)
+        return jax.lax.psum(q, AXIS)
+
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), P(AXIS), P()),
+        out_specs=P(),
+    )(Sb, Btb, lambda_ids, w)
+
+
 def dual_rhs(
     mesh: Mesh,
     L: jax.Array,
@@ -290,15 +320,16 @@ def build_coarse_problem(
     """Assemble G = BR and e = Rᵀf from subdomain-sharded (padded) stacks.
 
     ``R`` is the (S_pad, n, k) kernel-basis stack (zero for padding).
-    Padded subdomains have zero B̃ᵀ and zero load, so their G columns and e
-    entries are exactly zero: the padded Gram matrix is block-diagonal and
-    the regularizing jitter (scaled by the *real* column count S_real·k,
-    matching the single-device construction) keeps its factor well-defined
-    while the padded α components stay exactly zero through both
-    triangular solves.
+    Padded subdomains have zero B̃ᵀ and zero load, so their G columns and
+    e entries are exactly zero; the QR-derived coarse factor
+    (:func:`repro.feti.projector.coarse_factor`, computed once here —
+    GSPMD gathers the sharded columns for the setup-only QR) gives those
+    zero columns a unit pivot, so the padded α components stay exactly
+    zero through both triangular solves, and the leading block of the
+    factor is bit-identical to the unpadded single-device one (Householder
+    QR processes columns left to right; the trailing zero columns touch
+    nothing before them).
     """
-    k = R.shape[2]
-    ncols_pad = Bt.shape[0] * k
 
     def body(Bt_l, f_l, R_l, ids_l):
         return coarse_g_e(Bt_l, f_l, R_l, ids_l, n_lambda)
@@ -310,9 +341,6 @@ def build_coarse_problem(
         out_specs=(P(None, AXIS), P(AXIS)),
     )(Bt, f, R, lambda_ids)
 
-    GtG = G.T @ G  # (S_pad·k, S_pad·k): tiny, GSPMD gathers the columns
-    GtG = GtG + 1e-12 * jnp.trace(GtG) / (S_real * k) * jnp.eye(
-        ncols_pad, dtype=Bt.dtype)
-    chol = jax.device_put(jnp.linalg.cholesky(GtG), replicated_sharding(mesh))
+    chol = jax.device_put(coarse_factor(G), replicated_sharding(mesh))
     e = jax.device_put(e, replicated_sharding(mesh))
     return ShardedCoarseProblem(mesh=mesh, G=G, GtG_chol=chol, e=e)

@@ -42,6 +42,13 @@ def main(argv=None) -> int:
                         "default: the architecture's own problem")
     p.add_argument("--mode", choices=("explicit", "implicit"),
                    default="explicit")
+    p.add_argument("--precond", choices=("lumped", "dirichlet", "none"),
+                   default="lumped",
+                   help="PCPG preconditioner: lumped (B K Bᵀ, free), "
+                        "dirichlet (B S_b Bᵀ with the primal boundary "
+                        "Schur complement assembled on-device through the "
+                        "same sparsity-utilizing pipeline; "
+                        "docs/preconditioners.md), or none")
     p.add_argument("--tol", type=float, default=1e-9)
     p.add_argument("--validate", action="store_true",
                    help="compare against the global sparse solve (and, "
@@ -109,6 +116,7 @@ def main(argv=None) -> int:
             block_size=fc.block_size, rhs_block_size=fc.rhs_block_size,
         )
     solver = FetiSolver(prob, cfg, mode=args.mode,
+                        preconditioner=args.precond,
                         plan_cache=not args.no_plan_cache, mesh=mesh,
                         storage=args.storage)
     sol = solver.solve(tol=args.tol)
@@ -119,6 +127,14 @@ def main(argv=None) -> int:
         print(f"[feti] storage={st.storage} device bytes: "
               f"L={by['L']:,} K={by['K']:,} Btp={by['Btp']:,} "
               f"F={by['F']:,} (dense L would be {by['dense_L']:,})")
+        if st.Sb is not None:
+            sp = st.split
+            print(f"[feti] precond=dirichlet: boundary/interior split "
+                  f"{sp.n_b}/{sp.n_i} of {sp.n} DOFs, "
+                  f"Sb={by['Sb']:,} Btb={by['Btb']:,} bytes")
+            if st.dirichlet_plan is not None:
+                for line in st.dirichlet_plan.summary().splitlines():
+                    print(f"[autotune:dirichlet] {line}")
 
     if args.autotune and solver.plan is not None:
         for line in solver.plan.summary().splitlines():
@@ -150,14 +166,21 @@ def main(argv=None) -> int:
         if err > 1e-6:
             return 1
         if mesh is not None:
-            # the distributed run must reproduce the single-device one
+            # the distributed run must reproduce the single-device one.
+            # With --precond dirichlet the S_b stacks come from a
+            # differently-scheduled compiled program under shard_map and
+            # agree only to machine epsilon, so the PCPG stopping test can
+            # flip by one iteration near the threshold — allow that single
+            # flip there; the solution agreement stays strict either way.
             ref = FetiSolver(prob, cfg, mode=args.mode,
+                             preconditioner=args.precond,
                              plan_cache=not args.no_plan_cache
                              ).solve(tol=args.tol)
             du = np.max(np.abs(sol.u_global - ref.u_global))
             print(f"[feti] sharded vs single-device: max|Δu|={du:.2e} "
                   f"iters {sol.iterations} vs {ref.iterations}")
-            if du > 1e-9 or sol.iterations != ref.iterations:
+            iter_slack = 1 if args.precond == "dirichlet" else 0
+            if du > 1e-9 or abs(sol.iterations - ref.iterations) > iter_slack:
                 print("[feti] FAIL: sharded solve diverged from the "
                       "single-device solve")
                 return 1

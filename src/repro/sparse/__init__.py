@@ -3,7 +3,11 @@ dissection — the structured-grid analogue of the paper's Metis), symbolic
 block factorization (block elimination tree / fill mask), and the blocked
 numerical Cholesky in JAX whose tiles are born MXU-aligned."""
 from repro.sparse.cholesky import block_cholesky, block_cholesky_flops
-from repro.sparse.ordering import nested_dissection_order, rcm_order
+from repro.sparse.ordering import (
+    nested_dissection_order,
+    node_ordering,
+    rcm_order,
+)
 from repro.sparse.packed import (
     PackedBlockIndex,
     PackedBlocks,
@@ -29,6 +33,7 @@ __all__ = [
     "block_symbolic_cholesky",
     "matrix_pattern_from_elems",
     "nested_dissection_order",
+    "node_ordering",
     "pack_factor",
     "packed_block_index_for",
     "packed_symm_matvec",

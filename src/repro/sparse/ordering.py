@@ -19,7 +19,21 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["nested_dissection_order", "rcm_order"]
+__all__ = ["nested_dissection_order", "rcm_order", "node_ordering"]
+
+
+def node_ordering(node_shape: tuple[int, ...], ordering: str) -> np.ndarray:
+    """Dispatch a named fill-reducing node ordering ("nd" | "rcm" |
+    "natural") for a structured node grid — the one mapping shared by the
+    cluster preprocessor and the dirichlet boundary/interior split, so
+    adding an ordering cannot silently diverge between them."""
+    if ordering == "nd":
+        return nested_dissection_order(node_shape)
+    if ordering == "rcm":
+        return rcm_order(node_shape)
+    if ordering == "natural":
+        return np.arange(int(np.prod(node_shape)), dtype=np.int64)
+    raise ValueError(f"unknown ordering {ordering!r}")
 
 
 def nested_dissection_order(node_shape: tuple[int, ...], leaf: int = 4) -> np.ndarray:
