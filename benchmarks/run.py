@@ -47,7 +47,7 @@ DRY_OVERRIDES = {
     "bench_autotune": dict(sizes_2d=(8,), sizes_3d=(4,), bs=8, reps=1),
     "bench_feti": dict(cases=(("heat", 2, (2, 2), (4, 4)),
                               ("elasticity", 2, (2, 2), (3, 3))),
-                       bs=8, reps=1),
+                       bs=8, reps=1, n_rhs_list=(1, 2)),
     "bench_sharded": dict(dim=2, sub_grid=(2, 2), elems_per_sub=(4, 4),
                           bs=8, reps=1),
     "bench_lm": dict(reps=1),

@@ -120,14 +120,57 @@ class FetiProblem:
         return (self.dirichlet_gids[:, None] * ndpn
                 + np.arange(ndpn)).reshape(-1)
 
-    # ---- reference oracle: undecomposed global solve (tests only) ----
-    def reference_solution(self) -> np.ndarray:
-        """Direct sparse solve of the global system with Dirichlet BC.
+    # ---- multi-RHS load cases (solver inputs) ----
+    def load_stack(self) -> np.ndarray:
+        """The problem's own per-subdomain loads as one (S, n) stack —
+        the single-load-case input of :meth:`FetiSolver.solve_many`."""
+        return np.stack([sd.f for sd in self.subdomains])
 
-        Returns the (n_global_dofs,) solution in node-blocked DOF order.
+    def load_cases(self, n_rhs: int, kind: str = "sweep",
+                   seed: int = 0) -> np.ndarray:
+        """(n_rhs, S, n) stacked load cases for the multi-RHS solve path.
+
+        ``kind="sweep"`` scales the assembled body load by 1, 2, …
+        (a load sweep / pseudo-time-stepping stand-in whose solutions are
+        the scaled base solution); ``kind="random"`` draws i.i.d. normal
+        per-DOF loads normalized to the base load magnitude (a stand-in
+        for many independent user requests, each with its own convergence
+        history); ``kind="mixed"`` keeps the base load as column 0, a
+        zero load (converged at iteration 0) as column 1, and random
+        columns after — the shape the per-column-stopping tests use.
+        Every case is a legal FETI load: the matching global problem has
+        RHS :meth:`global_load` (the subdomain-assembled sum).
         """
-        import scipy.sparse.linalg as spla
+        base = self.load_stack()
+        if kind == "sweep":
+            scales = 1.0 + np.arange(n_rhs, dtype=float)
+            return scales[:, None, None] * base[None]
+        rng = np.random.default_rng(seed)
+        norm = np.abs(base).max()
+        rand = rng.standard_normal((n_rhs,) + base.shape) * norm
+        if kind == "random":
+            return rand
+        if kind == "mixed":
+            cases = rand
+            cases[0] = base
+            if n_rhs > 1:
+                cases[1] = 0.0
+            return cases
+        raise ValueError(f"unknown load-case kind {kind!r}")
 
+    def global_load(self, loads: np.ndarray) -> np.ndarray:
+        """Assemble one (S, n) per-subdomain load stack into the
+        (n_global_dofs,) global RHS: interface DOFs sum their subdomain
+        copies, exactly how the decomposition splits an integrated body
+        load (subdomain elements partition the global elements)."""
+        f = np.zeros(self.n_global_dofs)
+        for i, sd in enumerate(self.subdomains):
+            np.add.at(f, sd.dof_gids, loads[i])
+        return f
+
+    # ---- reference oracle: undecomposed global solve (tests only) ----
+    def _global_system(self):
+        """Assembled global (K csr, f, free-DOF ids) with Dirichlet BC."""
         mesh = self.global_mesh
         if self.problem == "heat":
             Ke = np.asarray(p1_element_stiffness(
@@ -148,9 +191,37 @@ class FetiProblem:
         nd = self.n_global_dofs
         K = assemble_scipy_csr(nd, edofs, Ke)
         free = np.setdiff1d(np.arange(nd), self.dirichlet_dofs)
-        u = np.zeros(nd)
+        return K, f, free
+
+    def reference_solution(self, loads: np.ndarray = None) -> np.ndarray:
+        """Direct sparse solve of the global system with Dirichlet BC.
+
+        Returns the (n_global_dofs,) solution in node-blocked DOF order.
+        ``loads`` (optional, a (S, n) per-subdomain stack) overrides the
+        problem's own body load with :meth:`global_load` of the stack —
+        the per-case oracle for :meth:`FetiSolver.solve_many`.
+        """
+        import scipy.sparse.linalg as spla
+
+        K, f, free = self._global_system()
+        if loads is not None:
+            f = self.global_load(loads)
+        u = np.zeros(self.n_global_dofs)
         u[free] = spla.spsolve(K[free][:, free].tocsc(), f[free])
         return u
+
+    def reference_solutions(self, cases: np.ndarray) -> np.ndarray:
+        """Per-column oracle for a (n_rhs, S, n) load-case stack: one
+        sparse factorization, all columns solved against it. Returns
+        (n_rhs, n_global_dofs) in node-blocked DOF order."""
+        import scipy.sparse.linalg as spla
+
+        K, _, free = self._global_system()
+        F = np.stack([self.global_load(c)[free] for c in cases], axis=1)
+        solve = spla.factorized(K[free][:, free].tocsc())
+        U = np.zeros((len(cases), self.n_global_dofs))
+        U[:, free] = np.stack([solve(F[:, j]) for j in range(F.shape[1])])
+        return U
 
 
 def _box_ranges(dim, sub_grid, elems_per_sub):

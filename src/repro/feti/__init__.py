@@ -14,30 +14,43 @@ from repro.feti.dirichlet import (
 )
 from repro.feti.operator import (
     dirichlet_preconditioner,
+    dirichlet_preconditioner_many,
     dual_rhs,
+    dual_rhs_many,
     explicit_dual_apply,
+    explicit_dual_apply_many,
     implicit_dual_apply,
+    implicit_dual_apply_many,
     lumped_preconditioner,
+    lumped_preconditioner_many,
 )
-from repro.feti.pcpg import PCPGResult, pcpg
+from repro.feti.pcpg import PCPGManyResult, PCPGResult, pcpg, pcpg_many
 from repro.feti.projector import CoarseProblem, build_coarse_problem
-from repro.feti.solver import FetiSolution, FetiSolver
+from repro.feti.solver import FetiManySolution, FetiSolution, FetiSolver
 
 __all__ = [
     "BoundaryInteriorSplit",
     "ClusterState",
     "CoarseProblem",
+    "FetiManySolution",
     "FetiSolution",
     "FetiSolver",
+    "PCPGManyResult",
     "PCPGResult",
     "assemble_dirichlet_schur",
     "boundary_interior_split",
     "build_coarse_problem",
     "dirichlet_preconditioner",
+    "dirichlet_preconditioner_many",
     "dual_rhs",
+    "dual_rhs_many",
     "preprocess_cluster",
     "explicit_dual_apply",
+    "explicit_dual_apply_many",
     "implicit_dual_apply",
+    "implicit_dual_apply_many",
     "lumped_preconditioner",
+    "lumped_preconditioner_many",
     "pcpg",
+    "pcpg_many",
 ]

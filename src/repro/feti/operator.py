@@ -31,24 +31,40 @@ __all__ = [
     "scatter_dual",
     "local_dual_apply",
     "explicit_dual_apply",
+    "explicit_dual_apply_many",
     "implicit_dual_apply",
+    "implicit_dual_apply_many",
     "lumped_preconditioner",
+    "lumped_preconditioner_many",
     "dirichlet_preconditioner",
+    "dirichlet_preconditioner_many",
     "dual_rhs",
+    "dual_rhs_many",
     "solve_with_factor",
+    "solve_with_factor_many",
     "apply_stiffness",
+    "apply_stiffness_many",
 ]
 
 
 def gather_local(lam: jax.Array, lambda_ids: jax.Array) -> jax.Array:
-    """(n_lambda,) dual vector -> (S, m_max) local blocks (pad id reads 0)."""
-    lam_ext = jnp.concatenate([lam, jnp.zeros((1,), lam.dtype)])
+    """(n_lambda,) dual vector -> (S, m_max) local blocks (pad id reads 0).
+
+    Rank-generic: an (n_lambda, n_rhs) multiplier stack gathers to
+    (S, m_max, n_rhs) — the same one-hot exchange applied per column.
+    """
+    lam_ext = jnp.concatenate(
+        [lam, jnp.zeros((1,) + lam.shape[1:], lam.dtype)])
     return lam_ext[lambda_ids]
 
 
 def scatter_dual(vals: jax.Array, lambda_ids: jax.Array, n_lambda: int) -> jax.Array:
-    """(S, m_max) local blocks -> (n_lambda,) additive dual assembly."""
-    out = jnp.zeros((n_lambda + 1,), vals.dtype)
+    """(S, m_max) local blocks -> (n_lambda,) additive dual assembly.
+
+    Rank-generic like :func:`gather_local`: (S, m_max, n_rhs) local column
+    stacks scatter-add to (n_lambda, n_rhs).
+    """
+    out = jnp.zeros((n_lambda + 1,) + vals.shape[2:], vals.dtype)
     return out.at[lambda_ids].add(vals)[:-1]
 
 
@@ -164,3 +180,108 @@ def dual_rhs(L, Btp: jax.Array, fp: jax.Array,
     t = solve_with_factor(L, fp)
     q_loc = jnp.einsum("snm,sn->sm", Btp, t)
     return scatter_dual(q_loc, lambda_ids, n_lambda) - c
+
+
+# --------------------------------------------------------------------------
+# multi-RHS column-stacked variants (ISSUE 6)
+# --------------------------------------------------------------------------
+#
+# Same operators on (.., n_rhs) column stacks: multiplier stacks are
+# (n_lambda, n_rhs), subdomain-local stacks (S, n, n_rhs). Kept as separate
+# functions (not a rank-polymorphic rewrite of the single-RHS ones) so the
+# single-column programs — whose iteration counts several tests pin — stay
+# byte-identical; gather/scatter are shared because indexing is naturally
+# rank-generic. The per-subdomain GEMV of the single-RHS path widens to a
+# GEMM, which is exactly the amortization story: the SC / factor /
+# preconditioner stacks are read from memory once per *block* application
+# and reused across all columns.
+
+def local_dual_apply_many(apply_local, lambda_ids: jax.Array, n_lambda: int,
+                          Lam: jax.Array) -> jax.Array:
+    """Gather → local apply → scatter for an (n_lambda, n_rhs) stack.
+
+    ``apply_local`` maps (S, m_max, n_rhs) gathered column stacks to
+    (S, m_max, n_rhs) results.
+    """
+    return scatter_dual(apply_local(gather_local(Lam, lambda_ids)),
+                        lambda_ids, n_lambda)
+
+
+def explicit_dual_apply_many(F: jax.Array, lambda_ids: jax.Array,
+                             n_lambda: int, Lam: jax.Array) -> jax.Array:
+    """Eq. 12 on a column stack: one (m×m)·(m×r) GEMM per subdomain."""
+    return local_dual_apply_many(
+        lambda p: jnp.einsum("sab,sbr->sar", F, p), lambda_ids, n_lambda, Lam)
+
+
+def solve_with_factor_many(L, B: jax.Array) -> jax.Array:
+    """(L Lᵀ)⁻¹ applied to a subdomain-stacked (S, n, n_rhs) column block.
+
+    Dense factors use the batched multi-RHS triangular solve directly;
+    packed factors vmap :func:`~repro.sparse.packed.packed_tri_solve` over
+    the trailing column axis (the packed kernel is single-RHS by design —
+    its block loop is structure-driven, not RHS-driven).
+    """
+    if isinstance(L, PackedBlocks):
+        cols = jax.vmap(packed_tri_solve, in_axes=(None, 1, None), out_axes=1)
+        fwd = jax.vmap(cols, in_axes=(0, 0, None))
+        return fwd(L, fwd(L, B, False), True)
+
+    def tri(L_, B_, transpose):
+        return jax.lax.linalg.triangular_solve(
+            L_, B_, left_side=True, lower=True, transpose_a=transpose)
+
+    t = jax.vmap(tri, in_axes=(0, 0, None))(L, B, False)
+    return jax.vmap(tri, in_axes=(0, 0, None))(L, t, True)
+
+
+def apply_stiffness_many(K, V: jax.Array) -> jax.Array:
+    """Batched ``Kᵢ Vᵢ`` for an (S, n, n_rhs) column block (dense/packed)."""
+    if isinstance(K, PackedBlocks):
+        cols = jax.vmap(packed_symm_matvec, in_axes=(None, 1), out_axes=1)
+        return jax.vmap(cols)(K, V)
+    return jnp.einsum("snk,skr->snr", K, V)
+
+
+def implicit_dual_apply_many(L, Btp: jax.Array, lambda_ids: jax.Array,
+                             n_lambda: int, Lam: jax.Array) -> jax.Array:
+    """Eq. 11 on a column stack: SPMM + multi-RHS TRSM + SPMM."""
+    p_loc = gather_local(Lam, lambda_ids)  # (S, m_max, n_rhs)
+    v = jnp.einsum("snm,smr->snr", Btp, p_loc)
+    t = solve_with_factor_many(L, v)
+    q_loc = jnp.einsum("snm,snr->smr", Btp, t)
+    return scatter_dual(q_loc, lambda_ids, n_lambda)
+
+
+def lumped_preconditioner_many(K, Bt: jax.Array, lambda_ids: jax.Array,
+                               n_lambda: int, W: jax.Array) -> jax.Array:
+    """Lumped preconditioner on an (n_lambda, n_rhs) residual stack."""
+
+    def apply_local(p):
+        v = jnp.einsum("snm,smr->snr", Bt, p)
+        v = apply_stiffness_many(K, v)
+        return jnp.einsum("snm,snr->smr", Bt, v)
+
+    return local_dual_apply_many(apply_local, lambda_ids, n_lambda, W)
+
+
+def dirichlet_preconditioner_many(Sb: jax.Array, Btb: jax.Array,
+                                  lambda_ids: jax.Array, n_lambda: int,
+                                  W: jax.Array) -> jax.Array:
+    """Dirichlet preconditioner on an (n_lambda, n_rhs) residual stack."""
+
+    def apply_local(p):
+        v = jnp.einsum("sbm,smr->sbr", Btb, p)
+        v = jnp.einsum("sab,sbr->sar", Sb, v)
+        return jnp.einsum("sbm,sbr->smr", Btb, v)
+
+    return local_dual_apply_many(apply_local, lambda_ids, n_lambda, W)
+
+
+def dual_rhs_many(L, Btp: jax.Array, Fp: jax.Array, lambda_ids: jax.Array,
+                  n_lambda: int, c: jax.Array) -> jax.Array:
+    """D = B K⁺ F − c1ᵀ for an (S, n, n_rhs) load-case stack ``Fp``
+    (factor row order); ``c`` broadcasts over the column axis."""
+    t = solve_with_factor_many(L, Fp)
+    q_loc = jnp.einsum("snm,snr->smr", Btp, t)
+    return scatter_dual(q_loc, lambda_ids, n_lambda) - c[:, None]

@@ -13,7 +13,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["PCPGResult", "pcpg"]
+__all__ = ["PCPGResult", "PCPGManyResult", "pcpg", "pcpg_many"]
 
 
 @jax.tree_util.register_dataclass
@@ -23,6 +23,16 @@ class PCPGResult:
     iterations: jax.Array  # int32 scalar
     residual: jax.Array  # final ||P r||
     converged: jax.Array  # bool scalar
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PCPGManyResult:
+    lam: jax.Array  # (n_lambda, n_rhs) multiplier stack
+    iterations: jax.Array  # (n_rhs,) int32 per-column iteration counts
+    residual: jax.Array  # (n_rhs,) final per-column ||P r||
+    converged: jax.Array  # (n_rhs,) bool
+    block_iterations: jax.Array  # int32 scalar: loop trips executed
 
 
 def _identity(x: jax.Array) -> jax.Array:
@@ -90,4 +100,105 @@ def pcpg(
     lam, r, p, zeta, w_norm, k = jax.lax.while_loop(cond, body, init)
     return PCPGResult(
         lam=lam, iterations=k, residual=w_norm, converged=w_norm <= atol
+    )
+
+
+def pcpg_many(
+    apply_F: Callable[[jax.Array], jax.Array],
+    project: Callable[[jax.Array], jax.Array],
+    D: jax.Array,
+    Lam0: jax.Array,
+    precondition: Optional[Callable[[jax.Array], jax.Array]] = None,
+    tol: float = 1e-9,
+    max_iter: int = 500,
+    mesh=None,
+) -> PCPGManyResult:
+    """Block-batched PCPG over an (n_lambda, n_rhs) multiplier stack with
+    per-column stopping.
+
+    Each column j runs the SAME iteration as :func:`pcpg` on its own
+    (d_j, λ⁰_j) — inner products, step lengths and stopping tests are all
+    per-column (reductions over the λ axis only), so the trajectory of a
+    column is independent of what its neighbours carry. The win over
+    ``vmap(pcpg)`` is shared operator traffic: ``apply_F``/``project``/
+    ``precondition`` see the whole (n_lambda, n_rhs) stack at once, so the
+    explicit SC stack (and the preconditioner stacks) stream from memory
+    once per *block* iteration instead of once per column — the multi-RHS
+    amortization the paper's explicit assembly exists for.
+
+    Per-column stopping freezes converged columns in place: their λ/r/p
+    carries stop updating (``jnp.where`` masks with safe denominators, so
+    no NaNs leak from frozen columns), their recorded residual/iteration
+    count stays at the converged value, and the loop exits when every
+    column is frozen or ``max_iter`` block iterations have run. A frozen
+    column still rides through the operator applications (its flops are
+    spent regardless — the block shape is static), which keeps the loop a
+    single ``lax.while_loop`` with one compiled program per (n_lambda,
+    n_rhs) shape; see docs/multirhs.md for the tradeoff discussion.
+
+    ``mesh`` has the same meaning as in :func:`pcpg`: carries pinned to
+    replicated layout between the shard_map'd operator applications.
+    """
+    if precondition is None:
+        precondition = _identity
+    if mesh is None:
+        constrain = _identity
+    else:
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        replicated = NamedSharding(mesh, PartitionSpec())
+
+        def constrain(x):
+            return jax.lax.with_sharding_constraint(x, replicated)
+
+    def col_dot(a, b):
+        return jnp.sum(a * b, axis=0)  # (n_rhs,) per-column inner products
+
+    def col_norm(a):
+        return jnp.sqrt(jnp.sum(a * a, axis=0))
+
+    R0 = D - apply_F(Lam0)
+    W0 = project(R0)
+    Z0 = project(precondition(W0))
+    zeta0 = col_dot(Z0, W0)
+    norm_w0 = col_norm(W0)
+    atol = tol * jnp.maximum(norm_w0, 1e-30)  # (n_rhs,)
+    active0 = norm_w0 > atol  # already-converged (e.g. zero-load padding)
+    #                           columns never enter the loop: 0 iterations
+
+    def cond(carry):
+        _, _, _, _, _, active, _, k = carry
+        return jnp.logical_and(k < max_iter, jnp.any(active))
+
+    def body(carry):
+        Lam, R, Pm, zeta, w_norm, active, iters, k = carry
+        FP = apply_F(Pm)
+        pFp = col_dot(Pm, FP)
+        gamma = jnp.where(active, zeta / jnp.where(active, pFp, 1.0), 0.0)
+        Lam = constrain(Lam + gamma * Pm)
+        R = constrain(R - gamma * FP)
+        # frozen columns have unchanged R, hence unchanged W/Z — cheap to
+        # recompute (block ops), and their w_norm/zeta stay at the frozen
+        # values without extra masking
+        W = project(R)
+        Z = project(precondition(W))
+        zeta_new = col_dot(Z, W)
+        beta = jnp.where(active, zeta_new / jnp.where(active, zeta, 1.0), 0.0)
+        Pm = constrain(jnp.where(active, Z + beta * Pm, Pm))
+        zeta = jnp.where(active, zeta_new, zeta)
+        w_norm = jnp.where(active, col_norm(W), w_norm)
+        iters = iters + active.astype(jnp.int32)
+        active = jnp.logical_and(active, w_norm > atol)
+        return Lam, R, Pm, zeta, w_norm, active, iters, k + 1
+
+    n_rhs = D.shape[1]
+    init = (
+        Lam0, R0, Z0, zeta0, norm_w0, active0,
+        jnp.zeros((n_rhs,), jnp.int32), jnp.asarray(0, jnp.int32),
+    )
+    Lam, R, Pm, zeta, w_norm, active, iters, k = jax.lax.while_loop(
+        cond, body, init)
+    return PCPGManyResult(
+        lam=Lam, iterations=iters, residual=w_norm,
+        converged=w_norm <= atol, block_iterations=k,
     )

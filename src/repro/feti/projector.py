@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["CoarseProblem", "build_coarse_problem", "coarse_g_e",
-           "coarse_factor"]
+           "coarse_e", "coarse_e_many", "coarse_factor"]
 
 
 def coarse_g_e(Bt: jax.Array, f: jax.Array, R: jax.Array,
@@ -44,6 +44,22 @@ def coarse_g_e(Bt: jax.Array, f: jax.Array, R: jax.Array,
     G = G.at[lambda_ids, s_idx].add(vals)[:-1].reshape(n_lambda, S * k)
     e = jnp.einsum("sn,snk->sk", f, R).reshape(S * k)
     return G, e
+
+
+def coarse_e(f: jax.Array, R: jax.Array) -> jax.Array:
+    """e = Rᵀf for one (S, n) load stack: the load-dependent half of
+    :func:`coarse_g_e`, split out so a solver can stream new load cases
+    through a cached coarse problem (G and its factor are load-free).
+    Same einsum as :func:`coarse_g_e`, so the result is bit-identical."""
+    S, _, k = R.shape
+    return jnp.einsum("sn,snk->sk", f, R).reshape(S * k)
+
+
+def coarse_e_many(F: jax.Array, R: jax.Array) -> jax.Array:
+    """e = RᵀF for an (S, n, n_rhs) load-case stack → (S·k, n_rhs),
+    subdomain-major rows matching G's column order."""
+    S, _, k = R.shape
+    return jnp.einsum("snr,snk->skr", F, R).reshape(S * k, F.shape[2])
 
 
 def coarse_factor(G: jax.Array) -> jax.Array:
@@ -100,13 +116,22 @@ class CoarseProblem:
             self.GtG_chol.T, t, lower=False
         )
 
+    # Every method below is rank-generic over trailing column axes: the
+    # matmuls / triangular solves broadcast an (n_lambda, n_rhs) multiplier
+    # stack or an (S·k, n_rhs) e-stack unchanged — this is PR 4's
+    # matrix-valued α machinery, now load-bearing for the multi-RHS path.
+
     def project(self, x: jax.Array) -> jax.Array:
         """P x = x − G (GᵀG)⁻¹ Gᵀ x."""
         return x - self.G @ self.solve_coarse(self.G.T @ x)
 
-    def lambda0(self) -> jax.Array:
-        """Feasible start: λ⁰ = G(GᵀG)⁻¹e satisfies Gᵀλ⁰ = e."""
-        return self.G @ self.solve_coarse(self.e)
+    def lambda0(self, e: jax.Array = None) -> jax.Array:
+        """Feasible start: λ⁰ = G(GᵀG)⁻¹e satisfies Gᵀλ⁰ = e.
+
+        ``e`` overrides the cached load moment — a (S·k,) vector or an
+        (S·k, n_rhs) stack of them for new load cases (see
+        :func:`coarse_e` / :func:`coarse_e_many`)."""
+        return self.G @ self.solve_coarse(self.e if e is None else e)
 
     def alpha(self, Flam_minus_d: jax.Array) -> jax.Array:
         """α = (GᵀG)⁻¹Gᵀ(Fλ − d): (S·k,), reshape to (S, k) per subdomain."""

@@ -40,6 +40,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.feti import operator as op
+from repro.feti import projector as proj
 from repro.feti.projector import CoarseProblem, coarse_factor, coarse_g_e
 
 try:  # jax >= 0.4.35 re-exports shard_map from the top level
@@ -51,12 +52,19 @@ __all__ = [
     "AXIS",
     "ShardedCoarseProblem",
     "build_coarse_problem",
+    "coarse_e",
+    "coarse_e_many",
     "data_sharding",
     "dirichlet_preconditioner",
+    "dirichlet_preconditioner_many",
     "dual_rhs",
+    "dual_rhs_many",
     "explicit_dual_apply",
+    "explicit_dual_apply_many",
     "implicit_dual_apply",
+    "implicit_dual_apply_many",
     "lumped_preconditioner",
+    "lumped_preconditioner_many",
     "mesh_size",
     "pad_stack",
     "padded_count",
@@ -259,6 +267,151 @@ def dual_rhs(
 
 
 # --------------------------------------------------------------------------
+# multi-RHS column-stacked operators (ISSUE 6)
+# --------------------------------------------------------------------------
+#
+# Same deployment as the single-RHS wrappers above — subdomain stacks
+# sharded P(AXIS), multiplier stacks replicated P() — with the batched
+# `_many` bodies of feti/operator.py per shard. A replicated rank-2
+# (n_lambda, n_rhs) stack and an extra trailing column axis on the sharded
+# (S, n, n_rhs) load stacks need no new specs: P(AXIS)/P() shard the
+# leading axis and replicate everything else, whatever the rank.
+
+def explicit_dual_apply_many(
+    mesh: Mesh,
+    F: jax.Array,
+    lambda_ids: jax.Array,
+    n_lambda: int,
+    Lam: jax.Array,
+) -> jax.Array:
+    """Eq. 12 on an (n_lambda, n_rhs) stack, the Σ over subdomains psum'd."""
+
+    def body(F_l, ids_l, Lam_r):
+        q = op.explicit_dual_apply_many(F_l, ids_l, n_lambda, Lam_r)
+        return jax.lax.psum(q, AXIS)
+
+    return shard_map(
+        body, mesh=mesh, in_specs=(P(AXIS), P(AXIS), P()), out_specs=P()
+    )(F, lambda_ids, Lam)
+
+
+def implicit_dual_apply_many(
+    mesh: Mesh,
+    L: jax.Array,
+    Btp: jax.Array,
+    lambda_ids: jax.Array,
+    n_lambda: int,
+    Lam: jax.Array,
+) -> jax.Array:
+    """Eq. 11 on an (n_lambda, n_rhs) stack, the Σ over subdomains psum'd."""
+
+    def body(L_l, B_l, ids_l, Lam_r):
+        q = op.implicit_dual_apply_many(L_l, B_l, ids_l, n_lambda, Lam_r)
+        return jax.lax.psum(q, AXIS)
+
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), P(AXIS), P()),
+        out_specs=P(),
+    )(L, Btp, lambda_ids, Lam)
+
+
+def lumped_preconditioner_many(
+    mesh: Mesh,
+    K: jax.Array,
+    Bt: jax.Array,
+    lambda_ids: jax.Array,
+    n_lambda: int,
+    W: jax.Array,
+) -> jax.Array:
+    """Lumped preconditioner on an (n_lambda, n_rhs) residual stack."""
+
+    def body(K_l, B_l, ids_l, W_r):
+        q = op.lumped_preconditioner_many(K_l, B_l, ids_l, n_lambda, W_r)
+        return jax.lax.psum(q, AXIS)
+
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), P(AXIS), P()),
+        out_specs=P(),
+    )(K, Bt, lambda_ids, W)
+
+
+def dirichlet_preconditioner_many(
+    mesh: Mesh,
+    Sb: jax.Array,
+    Btb: jax.Array,
+    lambda_ids: jax.Array,
+    n_lambda: int,
+    W: jax.Array,
+) -> jax.Array:
+    """Dirichlet preconditioner on an (n_lambda, n_rhs) residual stack."""
+
+    def body(Sb_l, Bb_l, ids_l, W_r):
+        q = op.dirichlet_preconditioner_many(Sb_l, Bb_l, ids_l, n_lambda, W_r)
+        return jax.lax.psum(q, AXIS)
+
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), P(AXIS), P()),
+        out_specs=P(),
+    )(Sb, Btb, lambda_ids, W)
+
+
+def dual_rhs_many(
+    mesh: Mesh,
+    L: jax.Array,
+    Btp: jax.Array,
+    Fp: jax.Array,
+    lambda_ids: jax.Array,
+    n_lambda: int,
+    c: jax.Array,
+) -> jax.Array:
+    """D = B K⁺ F − c1ᵀ for a sharded (S_pad, n, n_rhs) load-case stack;
+    the B-scatter is psum'd, c broadcast-subtracted once outside."""
+
+    def body(L_l, B_l, F_l, ids_l):
+        t = op.solve_with_factor_many(L_l, F_l)
+        q_loc = jnp.einsum("snm,snr->smr", B_l, t)
+        q = op.scatter_dual(q_loc, ids_l, n_lambda)
+        return jax.lax.psum(q, AXIS)
+
+    out = shard_map(
+        body, mesh=mesh, in_specs=(P(AXIS),) * 4, out_specs=P()
+    )(L, Btp, Fp, lambda_ids)
+    return out - c[:, None]
+
+
+def coarse_e(mesh: Mesh, f: jax.Array, R: jax.Array) -> jax.Array:
+    """e = Rᵀf from sharded (padded) stacks → replicated (S_pad·k,).
+
+    The load-dependent half of the coarse problem for streamed load
+    cases; padded subdomains have zero R, so their entries are zero."""
+    out = shard_map(
+        proj.coarse_e,
+        mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS)),
+        out_specs=P(AXIS),
+    )(f, R)
+    return jax.device_put(out, replicated_sharding(mesh))
+
+
+def coarse_e_many(mesh: Mesh, F: jax.Array, R: jax.Array) -> jax.Array:
+    """e = RᵀF for a sharded (S_pad, n, n_rhs) load-case stack →
+    replicated (S_pad·k, n_rhs), subdomain-major like G's columns."""
+    out = shard_map(
+        proj.coarse_e_many,
+        mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS)),
+        out_specs=P(AXIS),
+    )(F, R)
+    return jax.device_put(out, replicated_sharding(mesh))
+
+
+# --------------------------------------------------------------------------
 # coarse problem with column-sharded G
 # --------------------------------------------------------------------------
 
@@ -299,9 +452,14 @@ class ShardedCoarseProblem(CoarseProblem):
         """P x = x − G (GᵀG)⁻¹ Gᵀ x."""
         return x - self._g_t(self.solve_coarse(self._gt_x(x)))
 
-    def lambda0(self) -> jax.Array:
-        """Feasible start: λ⁰ = G(GᵀG)⁻¹e satisfies Gᵀλ⁰ = e."""
-        return self._g_t(self.solve_coarse(self.e))
+    def lambda0(self, e: jax.Array = None) -> jax.Array:
+        """Feasible start: λ⁰ = G(GᵀG)⁻¹e satisfies Gᵀλ⁰ = e.
+
+        ``e`` overrides the cached load moment — a replicated (S_pad·k,)
+        vector or (S_pad·k, n_rhs) stack (see :func:`coarse_e` /
+        :func:`coarse_e_many`); ``_g_t`` broadcasts the extra column axis
+        through its per-shard partial sums unchanged."""
+        return self._g_t(self.solve_coarse(self.e if e is None else e))
 
     def alpha(self, Flam_minus_d: jax.Array) -> jax.Array:
         """α = (GᵀG)⁻¹Gᵀ(Fλ − d); padded entries come out exactly zero."""

@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Optional, Union
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -26,18 +26,25 @@ from repro.core import SchurAssemblyConfig, assembly_flops
 from repro.feti.assembly import ClusterState, preprocess_cluster
 from repro.feti.operator import (
     dirichlet_preconditioner,
+    dirichlet_preconditioner_many,
     dual_rhs,
+    dual_rhs_many,
     explicit_dual_apply,
+    explicit_dual_apply_many,
     gather_local,
     implicit_dual_apply,
+    implicit_dual_apply_many,
     lumped_preconditioner,
+    lumped_preconditioner_many,
     solve_with_factor,
+    solve_with_factor_many,
 )
-from repro.feti.pcpg import PCPGResult, pcpg
-from repro.feti.projector import build_coarse_problem
+from repro.feti.pcpg import PCPGManyResult, PCPGResult, pcpg, pcpg_many
+from repro.feti.projector import build_coarse_problem, coarse_e, coarse_e_many
 from repro.fem.decomposition import FetiProblem
 
-__all__ = ["FetiSolver", "FetiSolution", "PRECONDITIONERS"]
+__all__ = ["FetiSolver", "FetiSolution", "FetiManySolution",
+           "PRECONDITIONERS"]
 
 PRECONDITIONERS = ("lumped", "dirichlet", "none")
 
@@ -52,6 +59,45 @@ class FetiSolution:
     residual: float
     converged: bool
     timings: dict
+
+
+@dataclasses.dataclass
+class FetiManySolution:
+    """A batch of load-case solutions from :meth:`FetiSolver.solve_many`.
+
+    All arrays carry the load-case index first; padding columns (when
+    ``rhs_unit`` rounded the batch up) are already stripped."""
+
+    u: np.ndarray  # (n_rhs, S, n) subdomain solutions, original DOF order
+    u_global: np.ndarray  # (n_rhs, n_global_dofs)
+    lam: np.ndarray  # (n_rhs, n_lambda)
+    alpha: np.ndarray  # (n_rhs, S, k)
+    iterations: np.ndarray  # (n_rhs,) per-column PCPG iteration counts
+    residuals: np.ndarray  # (n_rhs,) per-column final ||P r||
+    converged: np.ndarray  # (n_rhs,) bool
+    block_iterations: int  # block-PCPG loop trips (= max of iterations)
+    n_rhs: int  # requested load cases
+    n_rhs_padded: int  # columns actually solved (rhs_unit padding)
+    timings: dict
+
+
+@dataclasses.dataclass
+class _SolutionOps:
+    """Load-independent solution-phase machinery, built once per cluster
+    state and reused across :meth:`FetiSolver.solve` /
+    :meth:`FetiSolver.solve_many` calls — the server-style reuse pattern:
+    everything here depends only on the preprocessed cluster, so streaming
+    a new load case costs one RHS build plus PCPG iterations."""
+
+    coarse: object  # CoarseProblem / ShardedCoarseProblem
+    apply_F: Callable  # (n_lambda,) -> (n_lambda,)
+    apply_F_many: Callable  # (n_lambda, r) -> (n_lambda, r)
+    precond: Optional[Callable]
+    precond_many: Optional[Callable]
+    dual_rhs_vec: Callable  # fp (S, n) -> d (n_lambda,)
+    dual_rhs_cols: Callable  # Fp (S, n, r) -> D (n_lambda, r)
+    coarse_e_vec: Callable  # f (S, n) -> e (S·k,)
+    coarse_e_cols: Callable  # F (S, n, r) -> E (S·k, r)
 
 
 class FetiSolver:
@@ -106,6 +152,9 @@ class FetiSolver:
         self.storage = storage
         self.state: Optional[ClusterState] = None
         self.timings: dict = {}
+        self._ops: Optional[_SolutionOps] = None
+        self._runs: dict = {}  # (tol, max_iter) -> jitted pcpg
+        self._many_runs: dict = {}  # (tol, max_iter) -> jitted pcpg_many
 
     # ---- preprocessing (paper §2.2) ----
     def preprocess(self) -> ClusterState:
@@ -129,13 +178,19 @@ class FetiSolver:
             jax.block_until_ready(self.state.Sb)
         self.cfg = self.state.cfg  # resolved when "auto" was passed
         self.plan = self.state.plan
+        self._ops = None  # operators close over state arrays
+        self._runs = {}
+        self._many_runs = {}
         self.timings["preprocess_s"] = time.perf_counter() - t0
         return self.state
 
-    # ---- solution (paper §2.2) ----
-    def solve(self, tol: float = 1e-9, max_iter: int = 2000) -> FetiSolution:
-        if self.state is None:
-            self.preprocess()
+    # ---- solution-phase machinery, load-independent ----
+    def _solution_ops(self) -> _SolutionOps:
+        """Coarse problem + operator closures, built once per state and
+        cached: the pieces of the solution phase that do NOT depend on the
+        load, so streamed load cases reuse them (and their jit caches)."""
+        if self._ops is not None:
+            return self._ops
         st = self.state
         prob = self.problem
         nl = prob.n_lambda
@@ -150,16 +205,27 @@ class FetiSolver:
             if self.mode == "explicit":
                 apply_F = partial(explicit_dual_apply, st.F, st.lambda_ids,
                                   nl)
+                apply_F_many = partial(explicit_dual_apply_many, st.F,
+                                       st.lambda_ids, nl)
             else:
                 apply_F = partial(implicit_dual_apply, st.L, st.Btp,
                                   st.lambda_ids, nl)
+                apply_F_many = partial(implicit_dual_apply_many, st.L,
+                                       st.Btp, st.lambda_ids, nl)
             # K is packed in factor row order, so it pairs with Btp (the
             # product B̃ K B̃ᵀ is invariant to the shared row permutation)
             precond_args = (st.K, st.Btp, st.lambda_ids, nl)
             precond_fn = lumped_preconditioner
+            precond_fn_many = lumped_preconditioner_many
             dirichlet_args = (st.Sb, st.Btb, st.lambda_ids, nl)
             dirichlet_fn = dirichlet_preconditioner
-            d = dual_rhs(st.L, st.Btp, st.fp, st.lambda_ids, nl, c)
+            dirichlet_fn_many = dirichlet_preconditioner_many
+            dual_rhs_vec = lambda fp: dual_rhs(  # noqa: E731
+                st.L, st.Btp, fp, st.lambda_ids, nl, c)
+            dual_rhs_cols = lambda Fp: dual_rhs_many(  # noqa: E731
+                st.L, st.Btp, Fp, st.lambda_ids, nl, c)
+            coarse_e_vec = lambda f: coarse_e(f, st.R)  # noqa: E731
+            coarse_e_cols = lambda F: coarse_e_many(F, st.R)  # noqa: E731
         else:
             from repro.feti import sharded as shlib
 
@@ -176,18 +242,32 @@ class FetiSolver:
             if self.mode == "explicit":
                 apply_F = partial(shlib.explicit_dual_apply, st.mesh, st.F,
                                   st.lambda_ids, nl)
+                apply_F_many = partial(shlib.explicit_dual_apply_many,
+                                       st.mesh, st.F, st.lambda_ids, nl)
             else:
                 apply_F = partial(shlib.implicit_dual_apply, st.mesh, st.L,
                                   st.Btp, st.lambda_ids, nl)
+                apply_F_many = partial(shlib.implicit_dual_apply_many,
+                                       st.mesh, st.L, st.Btp,
+                                       st.lambda_ids, nl)
             precond_args = (st.mesh, st.K, st.Btp, st.lambda_ids, nl)
             precond_fn = shlib.lumped_preconditioner
+            precond_fn_many = shlib.lumped_preconditioner_many
             dirichlet_args = (st.mesh, st.Sb, st.Btb, st.lambda_ids, nl)
             dirichlet_fn = shlib.dirichlet_preconditioner
-            d = shlib.dual_rhs(st.mesh, st.L, st.Btp, st.fp, st.lambda_ids,
-                               nl, c)
+            dirichlet_fn_many = shlib.dirichlet_preconditioner_many
+            dual_rhs_vec = lambda fp: shlib.dual_rhs(  # noqa: E731
+                st.mesh, st.L, st.Btp, fp, st.lambda_ids, nl, c)
+            dual_rhs_cols = lambda Fp: shlib.dual_rhs_many(  # noqa: E731
+                st.mesh, st.L, st.Btp, Fp, st.lambda_ids, nl, c)
+            coarse_e_vec = lambda f: shlib.coarse_e(  # noqa: E731
+                st.mesh, f, st.R)
+            coarse_e_cols = lambda F: shlib.coarse_e_many(  # noqa: E731
+                st.mesh, F, st.R)
 
         if self.preconditioner == "lumped":
             precond = partial(precond_fn, *precond_args)
+            precond_many = partial(precond_fn_many, *precond_args)
         elif self.preconditioner == "dirichlet":
             if st.Sb is None:
                 raise ValueError(
@@ -195,65 +275,262 @@ class FetiSolver:
                     "construct the solver with preconditioner='dirichlet' "
                     "before preprocess()")
             precond = partial(dirichlet_fn, *dirichlet_args)
+            precond_many = partial(dirichlet_fn_many, *dirichlet_args)
         elif self.preconditioner == "none":
             precond = None
+            precond_many = None
         else:
             raise ValueError(f"unknown preconditioner {self.preconditioner!r}")
 
-        lam0 = coarse.lambda0()
+        self._ops = _SolutionOps(
+            coarse=coarse, apply_F=apply_F, apply_F_many=apply_F_many,
+            precond=precond, precond_many=precond_many,
+            dual_rhs_vec=dual_rhs_vec, dual_rhs_cols=dual_rhs_cols,
+            coarse_e_vec=coarse_e_vec, coarse_e_cols=coarse_e_cols,
+        )
+        return self._ops
+
+    def _load_stacks(self, loads: np.ndarray):
+        """Host (S_real, n, ...) load stack -> device (f, fp) arrays in
+        original and factor row order, padded + sharded when meshed."""
+        st = self.state
+        f_host = np.asarray(loads, dtype=self.dtype)
+        fp_host = f_host[:, np.asarray(st.node_perm)]
+        if st.mesh is None:
+            return jnp.asarray(f_host), jnp.asarray(fp_host)
+        from repro.feti import sharded as shlib
+
+        return (
+            shlib.shard_stack(st.mesh, shlib.pad_stack(f_host, st.S)),
+            shlib.shard_stack(st.mesh, shlib.pad_stack(fp_host, st.S)),
+        )
+
+    def _recover_u(self, up, alpha_flat, n_cols: Optional[int]):
+        """Shared recovery tail: factor-order K⁺(f − Bᵀλ) + kernel
+        correction, back-permuted to original DOF order and averaged onto
+        the global mesh. ``n_cols=None`` recovers one solution ((S, n) /
+        (n_global,)); an int recovers that many stacked columns with the
+        load-case axis leading."""
+        st = self.state
+        prob = self.problem
+        k = st.R.shape[2]
+        inv_perm = np.argsort(st.node_perm)
+        up_h = np.asarray(up)[: st.S_real]
+        R_h = np.asarray(st.R)[: st.S_real]
+        if n_cols is None:
+            alpha = np.asarray(alpha_flat).reshape(st.S, k)[: st.S_real]
+            u = up_h[:, inv_perm] + np.einsum("snk,sk->sn", R_h, alpha)
+        else:
+            alpha = np.asarray(alpha_flat).reshape(
+                st.S, k, n_cols)[: st.S_real]
+            u = (up_h[:, inv_perm]
+                 + np.einsum("snk,skr->snr", R_h, alpha))
+            u = np.moveaxis(u, -1, 0)  # (n_rhs, S, n)
+            alpha = np.moveaxis(alpha, -1, 0)  # (n_rhs, S, k)
+
+        # average duplicated interface copies onto the global mesh (DOFs)
+        nn = prob.n_global_dofs
+        lead = () if n_cols is None else (n_cols,)
+        acc = np.zeros(lead + (nn,))
+        cnt = np.zeros(nn)
+        for i, sd in enumerate(prob.subdomains):
+            np.add.at(acc, (..., sd.dof_gids), u[..., i, :])
+            np.add.at(cnt, sd.dof_gids, 1.0)
+        u_global = acc / np.maximum(cnt, 1.0)
+        return u, alpha, u_global
+
+    # ---- solution (paper §2.2) ----
+    def solve(self, tol: float = 1e-9, max_iter: int = 2000,
+              loads: Optional[np.ndarray] = None) -> FetiSolution:
+        """One PCPG solve. ``loads`` (optional, host (S_real, n) stack in
+        original DOF order) overrides the problem's own load vectors —
+        the single-case form of the :meth:`solve_many` streaming path."""
+        if self.state is None:
+            self.preprocess()
+        st = self.state
+        ops = self._solution_ops()
+        coarse = ops.coarse
+
+        if loads is None:
+            fp_dev = st.fp
+            lam0 = coarse.lambda0()
+        else:
+            f_dev, fp_dev = self._load_stacks(loads)
+            lam0 = coarse.lambda0(ops.coarse_e_vec(f_dev))
+        d = ops.dual_rhs_vec(fp_dev)
 
         t0 = time.perf_counter()
-        run = jax.jit(
-            lambda d_, lam0_: pcpg(
-                apply_F, coarse.project, d_, lam0_,
-                precondition=precond, tol=tol, max_iter=max_iter,
-                mesh=st.mesh,
-            )
-        )
-        res: PCPGResult = run(d, lam0)
+        res: PCPGResult = self._run(tol, max_iter)(d, lam0)
         jax.block_until_ready(res.lam)
         self.timings["solve_s"] = time.perf_counter() - t0
 
         # ---- recover α and u (paper eqs. 5, 7) ----
-        Flam = apply_F(res.lam)
-        alpha = coarse.alpha(Flam - d)  # (S·k,), subdomain-major
+        Flam = ops.apply_F(res.lam)
+        alpha_flat = coarse.alpha(Flam - d)  # (S·k,), subdomain-major
         lam_loc = gather_local(res.lam, st.lambda_ids)
-        rhs = st.fp - jnp.einsum("snm,sm->sn", st.Btp, lam_loc)
+        rhs = fp_dev - jnp.einsum("snm,sm->sn", st.Btp, lam_loc)
         up = solve_with_factor(st.L, rhs)
         # back to original DOF order + kernel (rigid-body) correction
         # u_i = K⁺(f − Bᵀλ)_i + R_i α_i; drop any inert mesh-padding
         # subdomains (S_real == S unsharded)
-        k = st.R.shape[2]
-        inv_perm = np.argsort(st.node_perm)
-        up_h = np.asarray(up)[: st.S_real]
-        alpha = np.asarray(alpha).reshape(st.S, k)[: st.S_real]
-        R_h = np.asarray(st.R)[: st.S_real]
-        u = up_h[:, inv_perm] + np.einsum("snk,sk->sn", R_h, alpha)
-
-        # average duplicated interface copies onto the global mesh (DOFs)
-        nn = prob.n_global_dofs
-        acc = np.zeros(nn)
-        cnt = np.zeros(nn)
-        for i, sd in enumerate(prob.subdomains):
-            np.add.at(acc, sd.dof_gids, u[i])
-            np.add.at(cnt, sd.dof_gids, 1.0)
-        u_global = acc / np.maximum(cnt, 1.0)
+        u, alpha, u_global = self._recover_u(up, alpha_flat, None)
 
         return FetiSolution(
             u=u,
             u_global=u_global,
             lam=np.asarray(res.lam),
-            alpha=np.asarray(alpha),
+            alpha=alpha,
             iterations=int(res.iterations),
             residual=float(res.residual),
             converged=bool(res.converged),
             timings=dict(self.timings),
         )
 
+    def _run(self, tol: float, max_iter: int):
+        """Jitted single-RHS PCPG runner, cached per (tol, max_iter): a
+        stream of single load cases (``solve(loads=...)`` or 1-column
+        :meth:`solve_many` batches) traces and compiles exactly once per
+        tolerance instead of once per call. The cached wrapper runs the
+        same compiled program a fresh ``jax.jit`` would, so results are
+        bit-identical to the uncached form."""
+        key = (float(tol), int(max_iter))
+        run = self._runs.get(key)
+        if run is None:
+            ops = self._solution_ops()
+            run = jax.jit(
+                lambda d_, lam0_: pcpg(
+                    ops.apply_F, ops.coarse.project, d_, lam0_,
+                    precondition=ops.precond, tol=tol, max_iter=max_iter,
+                    mesh=self.state.mesh,
+                )
+            )
+            self._runs[key] = run
+        return run
+
+    def _many_run(self, tol: float, max_iter: int):
+        """Jitted block-PCPG runner, cached per (tol, max_iter) so a
+        stream of equally-shaped batches compiles exactly once (jax.jit
+        handles distinct (n_lambda, n_rhs) shapes within one runner)."""
+        key = (float(tol), int(max_iter))
+        run = self._many_runs.get(key)
+        if run is None:
+            ops = self._solution_ops()
+            run = jax.jit(
+                lambda D_, Lam0_: pcpg_many(
+                    ops.apply_F_many, ops.coarse.project, D_, Lam0_,
+                    precondition=ops.precond_many, tol=tol,
+                    max_iter=max_iter, mesh=self.state.mesh,
+                )
+            )
+            self._many_runs[key] = run
+        return run
+
+    def solve_many(self, loads, tol: float = 1e-9, max_iter: int = 2000,
+                   rhs_unit: int = 1) -> FetiManySolution:
+        """Solve a batch of load cases against the cached cluster state.
+
+        This is the server-style entry point the amortization story asks
+        for: :meth:`preprocess` is paid once (factorization, explicit SC
+        assembly, autotuned plans, Dirichlet S_b), then an arbitrary
+        sequence of ``solve_many`` calls streams load-case batches through
+        one block-PCPG (:func:`repro.feti.pcpg.pcpg_many`) whose operator
+        applications touch the cached stacks once per block iteration for
+        ALL columns. Per-column stopping freezes converged columns, so a
+        mixed batch costs max-over-columns iterations, not the sum.
+
+        ``loads``: (n_rhs, S_real, n) host stack of per-subdomain load
+        vectors in original DOF order (a single (S_real, n) case is
+        promoted to a 1-batch). ``rhs_unit`` > 1 pads the batch with
+        zero-load dummy columns up to a multiple of that unit — zero
+        columns converge at iteration 0, so padding costs only the block
+        width — keeping compiled-shape reuse under control for ragged
+        request streams; the padding is stripped from the result.
+
+        A 1-column batch dispatches through the exact single-RHS
+        :meth:`solve` program, so its result is bit-identical to
+        ``solve(loads=...)``.
+        """
+        if self.state is None:
+            self.preprocess()
+        st = self.state
+        prob = self.problem
+        loads = np.asarray(loads)
+        if loads.ndim == 2:
+            loads = loads[None]
+        S_real, n = st.S_real, prob.subdomains[0].n
+        if loads.ndim != 3 or loads.shape[1:] != (S_real, n):
+            raise ValueError(
+                f"loads must be (n_rhs, {S_real}, {n}) "
+                f"(or one (S_real, n) case), got {loads.shape}")
+        if rhs_unit < 1:
+            raise ValueError(f"rhs_unit must be >= 1, got {rhs_unit}")
+        n_rhs = loads.shape[0]
+        r_pad = -(-n_rhs // rhs_unit) * rhs_unit
+
+        if r_pad == 1:
+            sol = self.solve(tol=tol, max_iter=max_iter, loads=loads[0])
+            self.timings["solve_many_s"] = self.timings["solve_s"]
+            self.timings["per_solve_s"] = self.timings["solve_s"]
+            return FetiManySolution(
+                u=sol.u[None], u_global=sol.u_global[None],
+                lam=sol.lam[None], alpha=sol.alpha[None],
+                iterations=np.asarray([sol.iterations]),
+                residuals=np.asarray([sol.residual]),
+                converged=np.asarray([sol.converged]),
+                block_iterations=sol.iterations,
+                n_rhs=1, n_rhs_padded=1, timings=dict(self.timings),
+            )
+
+        ops = self._solution_ops()
+        coarse = ops.coarse
+        t0 = time.perf_counter()
+        if r_pad > n_rhs:
+            loads = np.concatenate(
+                [loads, np.zeros((r_pad - n_rhs, S_real, n), loads.dtype)])
+        # column-stacked device layout: (S, n, n_rhs), load case last
+        F_dev, Fp_dev = self._load_stacks(loads.transpose(1, 2, 0))
+        D = ops.dual_rhs_cols(Fp_dev)
+        Lam0 = coarse.lambda0(ops.coarse_e_cols(F_dev))
+        jax.block_until_ready(D)
+        self.timings["rhs_setup_s"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        run = self._many_run(tol, max_iter)
+        res: PCPGManyResult = run(D, Lam0)
+        jax.block_until_ready(res.lam)
+        t_solve = time.perf_counter() - t0
+        self.timings["solve_many_s"] = t_solve
+        self.timings["per_solve_s"] = t_solve / n_rhs
+
+        # ---- recover α and u per column (paper eqs. 5, 7) ----
+        t0 = time.perf_counter()
+        Flam = ops.apply_F_many(res.lam)
+        alpha_flat = coarse.alpha(Flam - D)  # (S·k, r), subdomain-major
+        lam_loc = gather_local(res.lam, st.lambda_ids)  # (S, m_max, r)
+        rhs = Fp_dev - jnp.einsum("snm,smr->snr", st.Btp, lam_loc)
+        up = solve_with_factor_many(st.L, rhs)
+        u, alpha, u_global = self._recover_u(up, alpha_flat, r_pad)
+        self.timings["recover_s"] = time.perf_counter() - t0
+
+        keep = slice(0, n_rhs)  # strip rhs_unit padding columns
+        return FetiManySolution(
+            u=u[keep], u_global=u_global[keep],
+            lam=np.asarray(res.lam).T[keep],
+            alpha=alpha[keep],
+            iterations=np.asarray(res.iterations)[keep],
+            residuals=np.asarray(res.residual)[keep],
+            converged=np.asarray(res.converged)[keep],
+            block_iterations=int(res.block_iterations),
+            n_rhs=n_rhs, n_rhs_padded=r_pad,
+            timings=dict(self.timings),
+        )
+
     # ---- amortization (paper §5, Fig. 10) ----
     def amortization_report(self, t_assembly_s: float, t_implicit_iter_s: float,
                             t_explicit_iter_s: float,
-                            t_dirichlet_s: float = 0.0) -> dict:
+                            t_dirichlet_s: float = 0.0,
+                            n_rhs: int = 1,
+                            iters_per_solve: Optional[float] = None) -> dict:
         """Iterations needed before the explicit approach wins (paper §1).
 
         ``t_dirichlet_s`` is the extra preprocessing spent assembling the
@@ -261,10 +538,33 @@ class FetiSolver:
         preconditioner != "dirichlet"); it goes into the numerator — the
         stage pays for itself through *fewer* iterations, but its wall
         time still delays the break-even point of the explicit operator.
+
+        Multi-RHS extension (ISSUE 6): with ``n_rhs`` > 1 the iteration
+        times are understood as *block* iteration times on an
+        (n_lambda, n_rhs) stack, so ``amortization_iterations`` stays the
+        block-iteration break-even. Passing ``iters_per_solve`` (the
+        typical PCPG iteration count of one load case) additionally
+        reports ``amortization_solves`` — the number of *load cases*
+        after which explicit assembly has paid for itself: each batch of
+        ``n_rhs`` cases costs ~``iters_per_solve`` block iterations, so
+        break-even solves = break-even iterations / iters_per_solve ·
+        n_rhs. The analytic per-iteration cost model
+        (:func:`repro.launch.analytic.feti_solve_iter_counts`, shared
+        with the dry-run cells) is attached per n_rhs.
         """
         gain = t_implicit_iter_s - t_explicit_iter_s
         overhead = t_assembly_s + t_dirichlet_s
         point = float("inf") if gain <= 0 else overhead / gain
+        amort_solves = None
+        if iters_per_solve is not None and iters_per_solve > 0:
+            amort_solves = point / iters_per_solve * n_rhs
+        iter_counts = None
+        if self.state is not None:
+            from repro.launch.analytic import feti_solve_iter_counts
+
+            iter_counts = feti_solve_iter_counts(
+                self.state.S_real, self.problem.m_max, n_rhs=n_rhs,
+                fb=np.dtype(self.dtype).itemsize)
         flops = assembly_flops(self.state.env, self.cfg) if self.state else None
         d_flops = None
         st = self.state
@@ -278,10 +578,13 @@ class FetiSolver:
             d_flops["total"] += d_flops["cholesky_ii"]
         return {
             "amortization_iterations": point,
+            "amortization_solves": amort_solves,
+            "n_rhs": int(n_rhs),
             "assembly_s": t_assembly_s,
             "dirichlet_s": t_dirichlet_s,
             "implicit_iter_s": t_implicit_iter_s,
             "explicit_iter_s": t_explicit_iter_s,
             "assembly_flops_per_subdomain": flops,
             "dirichlet_flops_per_subdomain": d_flops,
+            "solve_iter_counts": iter_counts,
         }

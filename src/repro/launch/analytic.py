@@ -26,7 +26,44 @@ import math
 from repro.models.config import ModelConfig
 from repro.launch.shapes import ShapeCase
 
-__all__ = ["CellCounts", "lm_cell_counts"]
+__all__ = ["CellCounts", "lm_cell_counts", "feti_solve_iter_counts",
+           "FETI_SOLVE_N_RHS"]
+
+# default multi-RHS width of the ``solve_iter_multi`` dry-run cell; also
+# the middle of benchmarks/bench_feti.py's n_rhs sweep (1, 4, 16, 64)
+FETI_SOLVE_N_RHS = 16
+
+
+def feti_solve_iter_counts(S: int, m: int, n_rhs: int = 1,
+                           fb: int = 4) -> dict:
+    """Executed flops / HBM bytes of ONE explicit dual-operator
+    application (paper eq. 12) on an (n_lambda, n_rhs) multiplier stack.
+
+    The single shared multi-RHS cost model: dryrun's ``solve_iter`` /
+    ``solve_iter_multi`` cells and ``FetiSolver.amortization_report`` /
+    ``bench_feti``'s amortization rows all call this, so their numbers
+    agree by construction (the latent ``n_rhs=1`` assumption the cells
+    used to hard-code is now an explicit argument).
+
+    Flops: one (m×m)·(m×n_rhs) GEMM per subdomain = ``2·S·m²·n_rhs`` —
+    linear in n_rhs. Bytes: the (S, m, m) SC stack streams from memory
+    ONCE per block application regardless of n_rhs (that is the whole
+    multi-RHS amortization), plus the in/out multiplier stacks — so
+    arithmetic intensity grows ≈linearly with n_rhs until the GEMM turns
+    compute-bound.
+    """
+    if n_rhs < 1:
+        raise ValueError(f"n_rhs must be >= 1, got {n_rhs}")
+    flops = 2.0 * S * m * m * n_rhs
+    bytes_ = float(S * (m * m + 2 * m * n_rhs) * fb)
+    return {
+        "flops": float(flops),
+        "bytes": bytes_,
+        "flops_per_rhs": float(flops / n_rhs),
+        "bytes_per_rhs": bytes_ / n_rhs,
+        "arithmetic_intensity": flops / bytes_,
+        "n_rhs": int(n_rhs),
+    }
 
 
 @dataclasses.dataclass

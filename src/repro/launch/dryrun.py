@@ -65,7 +65,7 @@ from repro.train import (
     make_train_step,
 )
 
-FETI_SHAPES = ("assembly", "solve_iter", "dirichlet")
+FETI_SHAPES = ("assembly", "solve_iter", "solve_iter_multi", "dirichlet")
 BIG_PARAMS = 100e9  # >= this: bf16 moments + gradient accumulation
 
 
@@ -323,19 +323,32 @@ def lower_feti_cell(fc: FetiArchConfig, shape_name: str, mesh,
                      out_shardings=out_sh)
         return fn.lower(Kd_sds, Zb_sds)
 
-    # solve_iter: one explicit dual-operator application (paper eq. 12)
+    # solve_iter: one explicit dual-operator application (paper eq. 12);
+    # solve_iter_multi: the same application on an (n_lambda, n_rhs)
+    # multiplier stack (block-PCPG, ISSUE 6) — per-subdomain GEMV -> GEMM
     nl = prob.n_lambda
     ids = np.full((S, m), nl, np.int64)
     for i, sd in enumerate(prob.subdomains):
         ids[i, : sd.lambda_ids.shape[0]] = sd.lambda_ids
     lam_ids = jnp.asarray(ids)
 
+    F_sds = jax.ShapeDtypeStruct((S, m, m), jnp.float32)
+    in_sh = (NamedSharding(mesh, P(dp, None, None)), NamedSharding(mesh, P()))
+    if shape_name == "solve_iter_multi":
+        from repro.feti.operator import explicit_dual_apply_many
+        from repro.launch.analytic import FETI_SOLVE_N_RHS
+
+        def solve_iter_multi(F_stack, Lam):
+            return explicit_dual_apply_many(F_stack, lam_ids, nl, Lam)
+
+        Lam_sds = jax.ShapeDtypeStruct((nl, FETI_SOLVE_N_RHS), jnp.float32)
+        fn = jax.jit(solve_iter_multi, in_shardings=in_sh)
+        return fn.lower(F_sds, Lam_sds)
+
     def solve_iter(F_stack, lam):
         return explicit_dual_apply(F_stack, lam_ids, nl, lam)
 
-    F_sds = jax.ShapeDtypeStruct((S, m, m), jnp.float32)
     lam_sds = jax.ShapeDtypeStruct((nl,), jnp.float32)
-    in_sh = (NamedSharding(mesh, P(dp, None, None)), NamedSharding(mesh, P()))
     fn = jax.jit(solve_iter, in_shardings=in_sh)
     return fn.lower(F_sds, lam_sds)
 
@@ -391,11 +404,23 @@ def feti_cell_counts(fc: FetiArchConfig, shape_name: str, chips: int):
             "cholesky_ii_flops_masked": chol_ii,
             "restriction_flops": restrict,
         }
-    else:  # solve_iter
-        flops_global = float(S * 2 * m * m)
-        bytes_global = float(S * m * m * fb)
-        resident = float(S * m * m * fb)
-        notes = {"explicit_gemv_per_subdomain": 2 * m * m}
+    else:  # solve_iter / solve_iter_multi
+        from repro.launch.analytic import (
+            FETI_SOLVE_N_RHS,
+            feti_solve_iter_counts,
+        )
+
+        n_rhs = FETI_SOLVE_N_RHS if shape_name == "solve_iter_multi" else 1
+        iter_counts = feti_solve_iter_counts(S, m, n_rhs=n_rhs, fb=fb)
+        flops_global = iter_counts["flops"]
+        bytes_global = iter_counts["bytes"]
+        # the SC stack persists across iterations; multiplier stacks ride
+        # along (tiny for any realistic n_rhs)
+        resident = float(S * m * m * fb + 2 * prob.n_lambda * n_rhs * fb)
+        notes = {
+            "explicit_gemm_per_subdomain": 2 * m * m * n_rhs,
+            **{f"solve_iter_{k}": v for k, v in iter_counts.items()},
+        }
     return CellCounts(
         flops_global=flops_global,
         flops_per_dev=flops_global / chips,

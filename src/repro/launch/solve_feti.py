@@ -66,6 +66,12 @@ def main(argv=None) -> int:
     p.add_argument("--devices", type=int, default=0, metavar="N",
                    help="shard subdomains over an N-device ('data',) mesh "
                         "(forces N host devices on CPU-only hosts)")
+    p.add_argument("--n-rhs", type=int, default=0, metavar="R",
+                   help="solve R stacked load cases through the multi-RHS "
+                        "block-PCPG service (solve_many: preprocess once, "
+                        "stream the batch; docs/multirhs.md) instead of "
+                        "the single-load solve; with --validate each "
+                        "column is checked against its own global solve")
     args = p.parse_args(argv)
 
     if args.devices:
@@ -119,7 +125,12 @@ def main(argv=None) -> int:
                         preconditioner=args.precond,
                         plan_cache=not args.no_plan_cache, mesh=mesh,
                         storage=args.storage)
-    sol = solver.solve(tol=args.tol)
+    if args.n_rhs > 0:
+        # multi-RHS service: preprocess once, stream a load-case batch
+        loads = prob.load_cases(args.n_rhs, kind="sweep")
+        sol = solver.solve_many(loads, tol=args.tol)
+    else:
+        sol = solver.solve(tol=args.tol)
 
     st = solver.state
     if st is not None:
@@ -154,6 +165,37 @@ def main(argv=None) -> int:
                 print("[autotune] FAIL: autotuned assembly disagrees with "
                       "the dense baseline")
                 return 1
+    if args.n_rhs > 0:
+        converged = bool(sol.converged.all())
+        iters = " ".join(str(int(i)) for i in sol.iterations)
+        print(f"[feti] mode={args.mode} n_rhs={sol.n_rhs} "
+              f"(padded {sol.n_rhs_padded}) iters=[{iters}] "
+              f"block_iters={sol.block_iterations} converged={converged}")
+        print(f"[feti] preprocess={sol.timings['preprocess_s']:.2f}s "
+              f"solve_many={sol.timings['solve_many_s']:.2f}s "
+              f"per_solve={sol.timings['per_solve_s'] * 1e3:.1f}ms")
+        if args.validate:
+            refs = prob.reference_solutions(loads)
+            scale = np.abs(refs).max()
+            err = np.max(np.abs(sol.u_global - refs)) / scale
+            print(f"[feti] max per-column rel err vs global solves: "
+                  f"{err:.2e}")
+            if err > 1e-6:
+                return 1
+            if mesh is not None:
+                ref = FetiSolver(prob, cfg, mode=args.mode,
+                                 preconditioner=args.precond,
+                                 plan_cache=not args.no_plan_cache
+                                 ).solve_many(loads, tol=args.tol)
+                du = np.max(np.abs(sol.u_global - ref.u_global))
+                print(f"[feti] sharded vs single-device solve_many: "
+                      f"max|Δu|={du:.2e}")
+                if du > 1e-9:
+                    print("[feti] FAIL: sharded solve_many diverged from "
+                          "the single-device one")
+                    return 1
+        return 0 if converged else 1
+
     print(f"[feti] mode={args.mode} iters={sol.iterations} "
           f"residual={sol.residual:.2e} converged={sol.converged}")
     print(f"[feti] preprocess={sol.timings['preprocess_s']:.2f}s "

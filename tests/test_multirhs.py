@@ -1,0 +1,236 @@
+"""Oracle-backed multi-RHS solve tier (ISSUE 6).
+
+``FetiSolver.solve_many`` streams stacked load cases through one
+block-PCPG against a cluster preprocessed ONCE; every test here checks it
+against per-column undecomposed scipy solves (``reference_solutions``), the
+per-column stopping semantics, or the single-RHS path it must degenerate to.
+
+The module runs unchanged under ``REPRO_STORAGE=dense`` and
+``REPRO_STORAGE=packed`` (storage is left to the env default, as in the CI
+packed lane), and covers heat + elasticity, 2D + 3D, lumped + dirichlet.
+Sharded tests are additionally marked ``multidevice`` and auto-skip below
+2 devices (tests/conftest.py).
+"""
+import numpy as np
+import pytest
+
+from repro.core import SchurAssemblyConfig
+from repro.fem import decompose_problem
+from repro.feti import FetiSolver
+
+pytestmark = pytest.mark.multirhs
+
+multidevice = pytest.mark.multidevice
+
+CFG = SchurAssemblyConfig(block_size=8, rhs_block_size=8)
+
+# oracle agreement bar: |u - u_ref| <= ORACLE_RTOL * max|u_ref| per column
+ORACLE_RTOL = 1e-8
+
+
+@pytest.fixture(scope="module", params=["heat", "elasticity"])
+def prob2d(request):
+    return decompose_problem(request.param, 2, (2, 2), (3, 3))
+
+
+@pytest.fixture(scope="module", params=["heat", "elasticity"])
+def prob3d(request):
+    return decompose_problem(request.param, 3, (2, 2, 1), (2, 2, 2))
+
+
+def _check_oracle(prob, solm, cases):
+    refs = prob.reference_solutions(cases)
+    scale = np.abs(refs).max()
+    assert bool(solm.converged.all())
+    np.testing.assert_allclose(
+        solm.u_global, refs, atol=ORACLE_RTOL * scale)
+
+
+# --------------------------------------------------------------------------
+# oracle agreement: solve_many == per-column scipy global solves
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["explicit", "implicit"])
+def test_solve_many_matches_oracle_2d(prob2d, mode):
+    cases = prob2d.load_cases(4, kind="mixed", seed=0)
+    solver = FetiSolver(prob2d, CFG, mode=mode)
+    solm = solver.solve_many(cases, tol=1e-10)
+    _check_oracle(prob2d, solm, cases)
+    # the whole point: one preprocess, streamed batches — a second batch
+    # through the same solver must reuse the cached state and stay right
+    cases2 = prob2d.load_cases(4, kind="random", seed=7)
+    _check_oracle(prob2d, solver.solve_many(cases2, tol=1e-10), cases2)
+
+
+def test_solve_many_matches_oracle_3d(prob3d):
+    cases = prob3d.load_cases(3, kind="mixed", seed=1)
+    solm = FetiSolver(prob3d, CFG).solve_many(cases, tol=1e-10)
+    _check_oracle(prob3d, solm, cases)
+
+
+@pytest.mark.dirichlet
+def test_solve_many_dirichlet_preconditioner(prob2d):
+    cases = prob2d.load_cases(3, kind="mixed", seed=2)
+    solm = FetiSolver(prob2d, CFG, preconditioner="dirichlet").solve_many(
+        cases, tol=1e-10)
+    _check_oracle(prob2d, solm, cases)
+
+
+def test_solve_many_sweep_cases(prob2d):
+    """A load sweep (scaled base loads): solutions are the scaled base
+    solution, and relative per-column stopping converges them together."""
+    cases = prob2d.load_cases(3, kind="sweep")
+    solm = FetiSolver(prob2d, CFG).solve_many(cases, tol=1e-10)
+    _check_oracle(prob2d, solm, cases)
+    base = prob2d.reference_solution()
+    for j, s in enumerate((1.0, 2.0, 3.0)):
+        np.testing.assert_allclose(
+            solm.u_global[j], s * base, atol=1e-8 * np.abs(base).max() * s)
+
+
+# --------------------------------------------------------------------------
+# per-column stopping semantics
+# --------------------------------------------------------------------------
+
+
+def test_per_column_stopping_freezes_converged_columns(prob2d):
+    """Mixed batch: the zero-load column converges at iteration 0, live
+    columns keep iterating — counts must differ and the block runs only
+    max-over-columns iterations."""
+    cases = prob2d.load_cases(4, kind="mixed", seed=3)  # col 1 is zero load
+    solm = FetiSolver(prob2d, CFG).solve_many(cases, tol=1e-10)
+    assert solm.iterations[1] == 0  # zero load: converged before the loop
+    assert (solm.iterations[[0, 2, 3]] > 0).all()
+    assert len(np.unique(solm.iterations)) >= 2
+    assert solm.block_iterations == int(solm.iterations.max())
+    assert bool(solm.converged.all())
+    # the frozen zero column's solution is exactly the zero solution
+    np.testing.assert_allclose(
+        solm.u_global[1], 0.0,
+        atol=ORACLE_RTOL * np.abs(solm.u_global).max())
+
+
+def test_columns_are_independent(prob2d):
+    """A column's trajectory must not depend on its batch neighbours:
+    same column content + same batch shape => bit-identical results."""
+    base = prob2d.load_stack()
+    rng = np.random.default_rng(4)
+    other = rng.standard_normal(base.shape)
+    solver = FetiSolver(prob2d, CFG)
+    a = solver.solve_many(np.stack([base, np.zeros_like(base)]), tol=1e-10)
+    b = solver.solve_many(np.stack([base, other]), tol=1e-10)
+    assert np.array_equal(a.u_global[0], b.u_global[0])
+    assert np.array_equal(a.lam[0], b.lam[0])
+    assert a.iterations[0] == b.iterations[0]
+
+
+def test_single_column_solve_many_bit_identical_to_solve(prob2d):
+    """A 1-column batch dispatches through the exact single-RHS program."""
+    solver = FetiSolver(prob2d, CFG)
+    sol = solver.solve(tol=1e-10)
+    solm = solver.solve_many(prob2d.load_stack(), tol=1e-10)
+    assert solm.n_rhs == solm.n_rhs_padded == 1
+    assert np.array_equal(solm.u_global[0], sol.u_global)
+    assert np.array_equal(solm.u[0], sol.u)
+    assert np.array_equal(solm.lam[0], sol.lam)
+    assert np.array_equal(solm.alpha[0], sol.alpha)
+    assert solm.iterations[0] == sol.iterations
+    assert solm.residuals[0] == sol.residual
+
+
+# --------------------------------------------------------------------------
+# batching mechanics: ragged batches, padding, validation
+# --------------------------------------------------------------------------
+
+
+def test_ragged_batch_rhs_unit_padding(prob2d):
+    """n_rhs=3 with rhs_unit=4 pads with a zero column internally and
+    strips it from the result; values match the unpadded batch."""
+    cases = prob2d.load_cases(3, kind="mixed", seed=5)
+    solver = FetiSolver(prob2d, CFG)
+    ragged = solver.solve_many(cases, tol=1e-10, rhs_unit=4)
+    assert ragged.n_rhs == 3 and ragged.n_rhs_padded == 4
+    assert ragged.u_global.shape[0] == 3
+    assert ragged.iterations.shape == (3,)
+    _check_oracle(prob2d, ragged, cases)
+    # padding columns are zero loads: they converge at iteration 0, so
+    # they cannot change any live column (column independence above) —
+    # the padded batch agrees with the exact batch to solver accuracy
+    exact = solver.solve_many(cases, tol=1e-10)
+    scale = np.abs(exact.u_global).max()
+    np.testing.assert_allclose(ragged.u_global, exact.u_global,
+                               atol=1e-9 * scale)
+
+
+def test_solve_many_input_validation(prob2d):
+    solver = FetiSolver(prob2d, CFG)
+    good = prob2d.load_cases(2)
+    with pytest.raises(ValueError, match="loads must be"):
+        solver.solve_many(good[:, :, :-1])
+    with pytest.raises(ValueError, match="rhs_unit"):
+        solver.solve_many(good, rhs_unit=0)
+
+
+def test_load_cases_generators(prob2d):
+    S, n = prob2d.n_subdomains, prob2d.subdomains[0].n
+    sweep = prob2d.load_cases(3, kind="sweep")
+    assert sweep.shape == (3, S, n)
+    np.testing.assert_allclose(sweep[1], 2.0 * sweep[0])
+    mixed = prob2d.load_cases(3, kind="mixed", seed=0)
+    np.testing.assert_array_equal(mixed[0], prob2d.load_stack())
+    assert not mixed[1].any()
+    rand = prob2d.load_cases(3, kind="random", seed=0)
+    assert rand.shape == (3, S, n)
+    with pytest.raises(ValueError, match="kind"):
+        prob2d.load_cases(2, kind="bogus")
+
+
+# --------------------------------------------------------------------------
+# distributed: sharded solve_many vs single-device
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    from repro.launch.mesh import make_feti_mesh
+
+    return make_feti_mesh()
+
+
+@multidevice
+def test_sharded_solve_many_matches_single_device(prob2d, mesh):
+    """Same batch through the shard_map deployment: the heat solutions
+    agree to ~1e-14 (the sharded program is a reordered reduction of the
+    same arithmetic); elasticity columns may stop one iteration apart
+    near the threshold, so they agree at the achieved-residual level."""
+    cases = prob2d.load_cases(4, kind="mixed", seed=6)
+    ref = FetiSolver(prob2d, CFG).solve_many(cases, tol=1e-10)
+    sh = FetiSolver(prob2d, CFG, mesh=mesh).solve_many(cases, tol=1e-10)
+    assert bool(sh.converged.all())
+    du = np.abs(sh.u_global - ref.u_global).max()
+    bar = 5e-13 if prob2d.problem == "heat" else 1e-10
+    assert du <= bar, f"sharded drifted from single-device: {du:.2e}"
+    assert np.abs(sh.iterations - ref.iterations).max() <= 1
+    _check_oracle(prob2d, sh, cases)
+
+
+@multidevice
+def test_sharded_ragged_batch_roundtrip(prob2d, mesh):
+    """Ragged n_rhs (5, not divisible by rhs_unit=4 or the device count)
+    pads to 8 columns device-side and round-trips to exactly 5 results."""
+    cases = prob2d.load_cases(5, kind="mixed", seed=8)
+    sh = FetiSolver(prob2d, CFG, mesh=mesh).solve_many(
+        cases, tol=1e-10, rhs_unit=4)
+    assert sh.n_rhs == 5 and sh.n_rhs_padded == 8
+    assert sh.u_global.shape[0] == 5 and sh.lam.shape[0] == 5
+    _check_oracle(prob2d, sh, cases)
+
+
+@multidevice
+def test_sharded_single_column_matches_sharded_solve(prob2d, mesh):
+    solver = FetiSolver(prob2d, CFG, mesh=mesh)
+    sol = solver.solve(tol=1e-10)
+    solm = solver.solve_many(prob2d.load_stack(), tol=1e-10)
+    assert np.array_equal(solm.u_global[0], sol.u_global)
+    assert solm.iterations[0] == sol.iterations
