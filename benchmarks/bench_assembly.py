@@ -23,7 +23,9 @@ from benchmarks.common import device_bytes, emit, subdomain_problem, time_fn
 
 
 def run(sizes_2d=(16, 24), sizes_3d=(6, 9), ela_2d=(12, 16), ela_3d=(4, 6),
-        bs: int = 32, reps: int = 3) -> list[tuple]:
+        bs: int = 32, reps: int = 3,
+        stage_graph_cases=((2, (2, 2), (8, 8)), (2, (2, 2), (20, 20)),
+                           (3, (2, 1, 1), (3, 3, 3)))) -> list[tuple]:
     rows = []
     cases = [("heat", 2, sizes_2d), ("heat", 3, sizes_3d),
              # elasticity: same node grids are 2-3x the DOFs (node-blocked),
@@ -91,6 +93,66 @@ def run(sizes_2d=(16, 24), sizes_3d=(6, 9), ela_2d=(12, 16), ela_3d=(4, 6),
                 f"assembly/{tag}/mix_packed", t_mix_packed,
                 f"speedup={t_mix_dense / t_mix_packed:.2f};"
                 f"mem_ratio={b_packed / b_dense:.2f}"))
+    rows += run_stage_graph(cases=stage_graph_cases, reps=max(reps, 3))
+    return rows
+
+
+def run_stage_graph(cases, bs: int = 32, reps: int = 5) -> list[tuple]:
+    """ISSUE 7: mixed preprocessing (factorization + BOTH Schur stages)
+    through the stage graph with the shared interior factor, against the
+    PR-5 two-pipeline baseline (``share_factor=False``: the Dirichlet
+    stage refactorizes K_ii). Same compiled-prep timing protocol as
+    ``bench_feti`` — pattern fixed, values streamed. The win scales with
+    the interior fraction (the saved work is the Dirichlet stage's own
+    K_ii factorization plus streaming K_bb instead of the full permuted
+    K): ~1.3x on the (2,2)x(20,20) 2D case, nil on small-interior 3D
+    boxes."""
+    import numpy as np
+
+    from repro.fem.decomposition import decompose_elasticity_problem
+    from repro.fem.regularization import fixing_dofs_regularization
+    from repro.feti import FetiConfig
+    from repro.feti.assembly import make_cluster_preprocessor
+    from repro.feti.dirichlet import own_boundary_masks
+
+    rows = []
+    for dim, grid, eps in cases:
+        prob = decompose_elasticity_problem(dim, grid, eps)
+        n = prob.subdomains[0].n
+        tag = f"{dim}d-ela/n{n}"
+        cfg = SchurAssemblyConfig(block_size=bs, rhs_block_size=bs,
+                                  storage="dense")
+
+        def prep_time(share):
+            fc = FetiConfig(schur=cfg, preconditioner="dirichlet",
+                            share_factor=share)
+            static, prep = make_cluster_preprocessor(prob, fc)
+            np_ = static["node_perm"]
+            split = static["split"]
+            Kp = np.stack([
+                fixing_dofs_regularization(sd.K, sd.fixing_dofs)[np_][:, np_]
+                for sd in prob.subdomains])
+            Btp = np.stack([sd.Bt[np_] for sd in prob.subdomains])
+            dperm = split.dperm
+            Kd = np.stack([sd.K for sd in prob.subdomains]
+                          )[:, dperm][:, :, dperm]
+            if static["share"]:
+                Kd = Kd[:, split.n_i:, split.n_i:]
+            args = [jnp.asarray(Kp), jnp.asarray(Btp), jnp.asarray(Kd),
+                    jnp.asarray(own_boundary_masks(prob, split))]
+
+            def both_stages(*a):
+                _, F, Sb = prep(*a)
+                return F, Sb
+
+            return time_fn(both_stages, *args, reps=reps), static["share"]
+
+        t_base, shared0 = prep_time(False)
+        t_shared, shared1 = prep_time(True)
+        assert not shared0 and shared1
+        rows.append((f"assembly/{tag}/mix_two_pipelines", t_base, "baseline"))
+        rows.append((f"assembly/{tag}/mix_shared_factor", t_shared,
+                     f"speedup={t_base / t_shared:.2f}"))
     return rows
 
 

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.core import SchurAssemblyConfig
 from repro.fem import decompose_problem
-from repro.feti import FetiSolver
+from repro.feti import FetiConfig, FetiSolver
 from repro.feti.assembly import preprocess_cluster
 from repro.feti.operator import (
     dirichlet_preconditioner,
@@ -64,12 +64,16 @@ def run(cases=(("heat", 2, (2, 2), (8, 8)), ("heat", 2, (2, 2), (16, 16)),
         from repro.feti.assembly import make_cluster_preprocessor
         from repro.fem.regularization import fixing_dofs_regularization
 
-        def preprocess_time(cfg, explicit, dirichlet=False):
+        def preprocess_time(cfg, explicit, dirichlet=False,
+                            share_factor="auto"):
             """Time the COMPILED preprocessing (pattern fixed, values new —
             the paper's multi-step regime)."""
-            static, prep = make_cluster_preprocessor(prob, cfg,
-                                                     explicit=explicit,
-                                                     dirichlet=dirichlet)
+            fc = FetiConfig(
+                schur=cfg,
+                mode="explicit" if explicit else "implicit",
+                preconditioner="dirichlet" if dirichlet else "lumped",
+                share_factor=share_factor)
+            static, prep = make_cluster_preprocessor(prob, fc)
             np_ = static["node_perm"]
             Kp = np.stack([
                 fixing_dofs_regularization(sd.K, sd.fixing_dofs)[np_][:, np_]
@@ -84,12 +88,15 @@ def run(cases=(("heat", 2, (2, 2), (8, 8)), ("heat", 2, (2, 2), (16, 16)),
                 dperm = split.dperm
                 Kd = np.stack([sd.K for sd in prob.subdomains]
                               )[:, dperm][:, :, dperm]
+                if static["share"]:
+                    # shared interior factor: the stage streams only K_bb
+                    # (K_ib comes off the dual stage's permuted K input)
+                    Kd = Kd[:, split.n_i:, split.n_i:]
                 args += [jnp.asarray(Kd),
                          jnp.asarray(own_boundary_masks(prob, split))]
             idx = 2 if dirichlet else (1 if explicit else 0)
             us = time_fn(lambda *a: prep(*a)[idx], *args, reps=reps)
-            st = preprocess_cluster(prob, cfg, explicit=explicit,
-                                    dirichlet=dirichlet)
+            st = preprocess_cluster(prob, fc)
             return st, us
 
         import dataclasses
@@ -195,7 +202,8 @@ def run(cases=(("heat", 2, (2, 2), (8, 8)), ("heat", 2, (2, 2), (16, 16)),
             st_dir.Sb, st_dir.Btb, st_dir.lambda_ids, nl, w))
         t_ap_l = time_fn(apply_l, lam, reps=reps)
         t_ap_d = time_fn(apply_d, lam, reps=reps)
-        solver_dir = FetiSolver(prob, cfg_opt, preconditioner="dirichlet")
+        solver_dir = FetiSolver(prob, FetiConfig(
+            schur=cfg_opt, preconditioner="dirichlet"))
         sol_dir = solver_dir.solve(tol=1e-8, max_iter=500)
         rep = solver_dir.amortization_report(
             t_assembly_s=(t_expl_opt - t_impl) * 1e-6,

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit, fmt_bytes, time_fn
 from repro.core import SchurAssemblyConfig
 from repro.fem import decompose_heat_problem
+from repro.feti import FetiConfig
 from repro.feti import sharded as shlib
 from repro.feti.assembly import preprocess_cluster
 from repro.launch.mesh import make_feti_mesh
@@ -64,7 +65,7 @@ def run(dim: int = 2, sub_grid=(4, 4), elems_per_sub=(16, 16),
     base_preproc = base_expl = base_impl = None
     for nd in counts:
         mesh = make_feti_mesh(nd)
-        st = preprocess_cluster(prob, cfg, explicit=True, mesh=mesh)
+        st = preprocess_cluster(prob, FetiConfig(schur=cfg, mesh=mesh))
 
         # preprocessing: re-run the compiled factorize+assemble the state
         # carries on already-placed stacks (multi-step regime, fixed pattern)

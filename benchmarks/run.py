@@ -43,7 +43,8 @@ DRY_OVERRIDES = {
     "bench_variants": dict(sizes_2d=(8,), sizes_3d=(4,), bs=8, reps=1),
     "bench_kernels": dict(sizes_2d=(8,), sizes_3d=(4,), bs=8, reps=1),
     "bench_assembly": dict(sizes_2d=(8,), sizes_3d=(4,), ela_2d=(6,),
-                           ela_3d=(3,), bs=8, reps=1),
+                           ela_3d=(3,), bs=8, reps=1,
+                           stage_graph_cases=((2, (2, 2), (3, 3)),)),
     "bench_autotune": dict(sizes_2d=(8,), sizes_3d=(4,), bs=8, reps=1),
     "bench_feti": dict(cases=(("heat", 2, (2, 2), (4, 4)),
                               ("elasticity", 2, (2, 2), (3, 3))),

@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.core import SchurAssemblyConfig
 from repro.fem import decompose_heat_problem
-from repro.feti import FetiSolver
+from repro.feti import FetiConfig, FetiSolver
 
 
 def main(argv=None):
@@ -35,7 +35,7 @@ def main(argv=None):
     cfg = SchurAssemblyConfig(block_size=args.block_size,
                               rhs_block_size=args.block_size)
     for mode in ("explicit", "implicit"):
-        solver = FetiSolver(prob, cfg, mode=mode)
+        solver = FetiSolver(prob, FetiConfig(schur=cfg, mode=mode))
         sol = solver.solve(tol=args.tol)
         u_ref = prob.reference_solution()
         err = np.max(np.abs(sol.u_global - u_ref)) / np.abs(u_ref).max()

@@ -8,6 +8,8 @@ Public API:
   * the assembly pipeline + config: :mod:`repro.core.schur`
   * the plan autotuner + content-addressed plan cache:
     :mod:`repro.core.autotune` (``plan`` façade below)
+  * the declarative stage graph (many Schur stages, one joint plan):
+    :mod:`repro.core.stages` (docs/stage_graph.md)
 """
 from repro.core.schur import (
     SchurAssemblyConfig,
@@ -38,13 +40,18 @@ from repro.core.autotune import (
     plan_assembly,
     plan_from_builder,
 )
+from repro.core.stages import GraphPlan, ResolvedStage, StageGraph, StageSpec
 
 # the façade: `from repro.core import plan; plan(bt_pattern).cfg`
 plan = plan_assembly
 
 __all__ = [
+    "GraphPlan",
     "Plan",
+    "ResolvedStage",
     "SchurAssemblyConfig",
+    "StageGraph",
+    "StageSpec",
     "SteppedMeta",
     "assembly_cost",
     "enumerate_space",

@@ -64,7 +64,10 @@ __all__ = [
 # v3: the assembly stage joined the cache key ("dual" | "dirichlet" —
 #     the primal boundary Schur stage of the Dirichlet preconditioner is
 #     planned and cached independently of the dual-operator stage).
-SPACE_VERSION = 3
+# v4: the fused TRSM→SYRK megakernel joined the space (fused= on every
+#     config), and multi-stage graphs are planned JOINTLY under one cache
+#     key over all stages (repro.core.stages) instead of per-stage entries.
+SPACE_VERSION = 4
 
 # Pallas kernels only run natively on TPU; elsewhere they fall back to
 # interpret mode, which is orders of magnitude slower. The model multiplies
@@ -197,6 +200,22 @@ def assembly_bytes(meta: SteppedMeta, cfg: SchurAssemblyConfig,
                    block_mask: Optional[np.ndarray] = None,
                    dtype_bytes: int = _F64) -> dict:
     """Estimated main-memory traffic (bytes) and dispatched-op counts."""
+    if cfg.fused:
+        # ONE megakernel launch: factor + Linv + B in, F out — the Y panel
+        # lives in VMEM and never touches HBM (the whole point of fusing;
+        # unfused pays ~2·n·m for the Y round-trip plus nc re-reads)
+        db = dtype_bytes
+        bs = meta.block_size
+        n_pad = meta.num_row_blocks * bs
+        m_pad = meta.num_col_blocks * meta.rhs_block_size
+        if cfg.storage == "packed":
+            factor = _packed_blocks(meta, block_mask) * bs * bs
+        else:
+            factor = n_pad * n_pad / 2
+        total = db * (factor + n_pad * bs + n_pad * m_pad + m_pad * m_pad)
+        # attribute it all to "trsm" so the roofline sums stay well-formed
+        return {"trsm": total, "syrk": 0.0, "total": total,
+                "trsm_ops": 1, "syrk_ops": 0, "ops": 1}
     tb, to = _trsm_bytes_ops(meta, cfg, block_mask, dtype_bytes)
     sb, so = _syrk_bytes_ops(meta, cfg, dtype_bytes)
     return {"trsm": tb, "syrk": sb, "total": tb + sb,
@@ -252,6 +271,13 @@ def enumerate_space(block_sizes: Sequence[int],
     and the Pallas kernels — elsewhere it densifies transiently and can
     never beat its dense twin). ``storage`` restricts the space to one
     layout ("dense"/"packed"); ``None`` enumerates both.
+
+    The fused TRSM→SYRK megakernel (SPACE_VERSION 4) adds one candidate
+    per (block size, storage): its schedule is structurally rhs-split ×
+    output-split, so the variant fields are pinned to that pair (dense
+    storage) / factor-split × output-split (packed storage, where the
+    factor arrives as the CSR block stack) and ``fused=True`` marks it as
+    its own measured-refinement family.
     """
     if storage not in (None, "dense", "packed"):
         raise ValueError(f"storage must be None|dense|packed, got {storage!r}")
@@ -283,6 +309,17 @@ def enumerate_space(block_sizes: Sequence[int],
                         trsm_variant=tv, syrk_variant=sv, block_size=bs,
                         prune=False, use_pallas=True, interpret=interpret,
                         storage="packed"))
+        # the fused megakernel: one candidate per storage layout
+        if "dense" in want:
+            out.append(SchurAssemblyConfig(
+                trsm_variant="rhs_split", syrk_variant="output_split",
+                block_size=bs, prune=False, use_pallas=True, fused=True,
+                interpret=interpret, storage="dense"))
+        if "packed" in want:
+            out.append(SchurAssemblyConfig(
+                trsm_variant="factor_split", syrk_variant="output_split",
+                block_size=bs, prune=False, use_pallas=True, fused=True,
+                interpret=interpret, storage="packed"))
     if not out:
         # storage="packed" with no native candidate shape cannot happen
         # (factor_split is always enumerated), but guard anyway
@@ -607,18 +644,24 @@ def plan_from_builder(
         #   stage 2 — sweep the winning pair across its remaining block
         #             sizes / prune toggles (the Fig. 5 axis), bounded by
         #             top_k.
+        # family key: the fused megakernel is its own family, so whenever
+        # pallas candidates are runnable (on TPU) fused is always timed
+        # against unfused — "never slower than unfused" holds by
+        # construction of this refinement, not by trusting the model
+        def _family(cfg):
+            return (cfg.trsm_variant, cfg.syrk_variant, cfg.storage,
+                    cfg.fused)
+
         runnable = [t for t in scored
                     if not (t[1].use_pallas and device.kind != "tpu")]
         stage1: dict = {}
         for t in runnable:  # runnable is model-score sorted
-            pair = (t[1].trsm_variant, t[1].syrk_variant, t[1].storage)
-            stage1.setdefault(pair, t)
+            stage1.setdefault(_family(t[1]), t)
         results = [(_measure(t), t) for t in stage1.values()]
         _, win = min(results, key=lambda r: r[0])
-        win_pair = (win[1].trsm_variant, win[1].syrk_variant, win[1].storage)
+        win_pair = _family(win[1])
         stage2 = [t for t in runnable
-                  if (t[1].trsm_variant, t[1].syrk_variant,
-                      t[1].storage) == win_pair
+                  if _family(t[1]) == win_pair
                   and t is not stage1[win_pair]][:top_k]
         results += [(_measure(t), t) for t in stage2]
 

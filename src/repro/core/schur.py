@@ -66,6 +66,13 @@ class SchurAssemblyConfig:
       prune: skip structurally-zero factor blocks in the factor-split GEMM
         updates (needs a block fill mask; paper's "pruning").
       use_pallas: dispatch TRSM/SYRK to the Pallas TPU kernels.
+      fused: run TRSM→SYRK as ONE Pallas megakernel (stepped_trsm_syrk):
+        the solution panel Y stays in VMEM across the stage boundary
+        instead of round-tripping HBM between the two kernels. Requires
+        ``use_pallas``; the ``trsm_variant``/``syrk_variant`` fields are
+        ignored (the megakernel's schedule is rhs-split × output-split by
+        construction). Enumerated by the autotuner as its own candidate
+        family, so it is only ever picked when measured faster.
       interpret: run Pallas kernels in interpret mode (CPU validation).
       storage: factor storage layout, "dense" (a (n, n) array) or "packed"
         (a :class:`repro.sparse.packed.PackedBlocks`: the symbolic fill
@@ -82,6 +89,7 @@ class SchurAssemblyConfig:
     rhs_block_size: Optional[int] = None
     prune: bool = True
     use_pallas: bool = False
+    fused: bool = False
     interpret: bool = False
     storage: str = dataclasses.field(default_factory=_default_storage)
 
@@ -92,6 +100,9 @@ class SchurAssemblyConfig:
             raise ValueError(f"syrk_variant must be one of {SYRK_VARIANTS}")
         if self.storage not in STORAGE_VARIANTS:
             raise ValueError(f"storage must be one of {STORAGE_VARIANTS}")
+        if self.fused and not self.use_pallas:
+            raise ValueError("fused=True is the Pallas TRSM→SYRK megakernel "
+                             "and requires use_pallas=True")
 
     @property
     def rhs_bs(self) -> int:
@@ -101,7 +112,8 @@ class SchurAssemblyConfig:
     def is_dense_baseline(self) -> bool:
         """True when no variant exploits the stepped order — the column
         permutation is then a mathematical no-op and is skipped."""
-        return self.trsm_variant == "dense" and self.syrk_variant == "dense"
+        return (self.trsm_variant == "dense" and self.syrk_variant == "dense"
+                and not self.fused)
 
 
 def _coerce_factor(L, meta, cfg, block_mask):
@@ -126,6 +138,15 @@ def _coerce_factor(L, meta, cfg, block_mask):
     if cfg.storage == "dense" and packed:
         return L.unpack()
     return L
+
+
+def _trsm_syrk_fused(L, Bp, meta, cfg):
+    """The fused Pallas megakernel: F = (L⁻¹Bp)ᵀ(L⁻¹Bp) in one kernel,
+    Y held in VMEM across the TRSM→SYRK boundary (kernels/stepped_trsm_syrk).
+    Dense and packed factors both supported — the wrapper dispatches."""
+    from repro.kernels import ops as kops  # lazy: avoid import cycle
+
+    return kops.stepped_trsm_syrk(L, Bp, meta, interpret=cfg.interpret)
 
 
 def _trsm(L, Bp, meta, cfg, block_mask):
@@ -201,9 +222,12 @@ def make_assembler(
 
     def assemble(L, Bt: jax.Array) -> jax.Array:
         Bp = Bt[:, perm]
-        Y = _trsm(_coerce_factor(L, meta, cfg, block_mask), Bp, meta, cfg,
-                  block_mask)
-        Fp = _syrk(Y, meta, cfg)
+        Lc = _coerce_factor(L, meta, cfg, block_mask)
+        if cfg.fused:
+            Fp = _trsm_syrk_fused(Lc, Bp, meta, cfg)
+        else:
+            Y = _trsm(Lc, Bp, meta, cfg, block_mask)
+            Fp = _syrk(Y, meta, cfg)
         # permute back: F[i, j] = Fp[inv[i], inv[j]]
         return Fp[inv][:, inv]
 
@@ -233,6 +257,13 @@ def schur_dense_baseline(L: jax.Array, Bt: jax.Array) -> jax.Array:
 
 def assembly_flops(meta: SteppedMeta, cfg: SchurAssemblyConfig) -> dict:
     """FLOP model of one assembly under ``cfg`` (lower-triangle SYRK)."""
+    if cfg.fused:
+        # the megakernel's schedule is per-stripe forward substitution with
+        # the stepped skip (= rhs_split flops) + output-tile contraction
+        # with the per-stripe lower bound (= output_split flops)
+        trsm = meta.flops_trsm_rhs_split()
+        syrk = meta.flops_syrk_output_split()
+        return {"trsm": trsm, "syrk": syrk, "total": trsm + syrk}
     trsm = {
         "dense": meta.flops_trsm_dense,
         "rhs_split": meta.flops_trsm_rhs_split,

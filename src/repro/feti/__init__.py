@@ -1,12 +1,20 @@
 """FETI solver substrate (paper §2): batched per-cluster preprocessing
-(factorization + sparsity-utilizing SC assembly), the dual operator in both
-implicit and explicit form, the natural-coarse-space projector, PCPG, and
-the end-to-end solver with amortization accounting (paper §5).
+(factorization + sparsity-utilizing SC assembly as one planned stage
+graph), the dual operator in both implicit and explicit form, the
+natural-coarse-space projector, PCPG, and the end-to-end solver with
+amortization accounting (paper §5).
+
+The front door is :class:`FetiConfig`: one frozen dataclass carrying every
+pipeline knob, accepted by :class:`FetiSolver`, :func:`preprocess_cluster`
+and :func:`solve_many` as their single ``config`` argument (README
+§Migrating to FetiConfig documents the old-keyword deprecation).
 
 :mod:`repro.feti.sharded` distributes the whole pipeline by sharding the
-subdomain axis over a ``("data",)`` device mesh; pass ``mesh=`` to
-:class:`FetiSolver` / :func:`preprocess_cluster` to use it."""
+subdomain axis over a ``("data",)`` device mesh; pass
+``FetiConfig(mesh=...)`` to use it."""
+from repro.core.stages import StageGraph, StageSpec
 from repro.feti.assembly import ClusterState, preprocess_cluster
+from repro.feti.config import FetiConfig, as_feti_config
 from repro.feti.dirichlet import (
     BoundaryInteriorSplit,
     assemble_dirichlet_schur,
@@ -26,17 +34,26 @@ from repro.feti.operator import (
 )
 from repro.feti.pcpg import PCPGManyResult, PCPGResult, pcpg, pcpg_many
 from repro.feti.projector import CoarseProblem, build_coarse_problem
-from repro.feti.solver import FetiManySolution, FetiSolution, FetiSolver
+from repro.feti.solver import (
+    FetiManySolution,
+    FetiSolution,
+    FetiSolver,
+    solve_many,
+)
 
 __all__ = [
     "BoundaryInteriorSplit",
     "ClusterState",
     "CoarseProblem",
+    "FetiConfig",
     "FetiManySolution",
     "FetiSolution",
     "FetiSolver",
     "PCPGManyResult",
     "PCPGResult",
+    "StageGraph",
+    "StageSpec",
+    "as_feti_config",
     "assemble_dirichlet_schur",
     "boundary_interior_split",
     "build_coarse_problem",
@@ -44,7 +61,6 @@ __all__ = [
     "dirichlet_preconditioner_many",
     "dual_rhs",
     "dual_rhs_many",
-    "preprocess_cluster",
     "explicit_dual_apply",
     "explicit_dual_apply_many",
     "implicit_dual_apply",
@@ -53,4 +69,6 @@ __all__ = [
     "lumped_preconditioner_many",
     "pcpg",
     "pcpg_many",
+    "preprocess_cluster",
+    "solve_many",
 ]

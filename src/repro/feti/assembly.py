@@ -7,14 +7,27 @@ the (envelope) stepped metadata — the whole cluster preprocesses in ONE
 compiled XLA program with a leading subdomain axis. This replaces the
 paper's 16-CUDA-streams subdomain loop with the TPU-idiomatic batched form.
 
-Pass ``mesh`` (a ``("data",)`` mesh, see :func:`repro.launch.mesh.
-make_feti_mesh`) to shard that subdomain axis over devices — the
-multi-node story. Preprocessing then relabels local multipliers into each
-subdomain's stepped column order host-side (the ``col_perm=None``
-assembler path), pads the cluster to a multiple of the mesh size, and
-factorizes + assembles under ``shard_map`` so every device owns its slice
-of subdomains end-to-end; :mod:`repro.feti.sharded` documents the scheme.
-``mesh=None`` keeps the single-device behavior bit-for-bit.
+Since the stage-graph redesign the preprocessor is organized around
+:class:`repro.core.stages.StageGraph`: every Schur assembly stage — the
+dual operator F̃ = (L⁻¹B̃ᵀ)ᵀ(L⁻¹B̃ᵀ) and (with the Dirichlet
+preconditioner) the primal boundary S_b = K_bb − K_bi K_ii⁻¹ K_ib — is
+declared as a :class:`~repro.core.stages.StageSpec` and planned JOINTLY
+under one cache key, then executed by one compiled prep. When the
+boundary/interior split aligns with the row ordering the graph dedupes the
+interior factorization: the dual rows are reordered ``split.dperm`` so the
+dual factor's leading (n_i, n_i) principal block IS the Cholesky factor of
+the unregularized K_ii, and the Dirichlet stage reuses it instead of
+factorizing its own copy (docs/stage_graph.md §Factor sharing).
+
+Pass ``FetiConfig(mesh=...)`` (a ``("data",)`` mesh, see
+:func:`repro.launch.mesh.make_feti_mesh`) to shard the subdomain axis over
+devices — the multi-node story. Preprocessing then relabels local
+multipliers into each subdomain's stepped column order host-side (the
+``col_perm=None`` assembler path), pads the cluster to a multiple of the
+mesh size, and factorizes + assembles under ``shard_map`` so every device
+owns its slice of subdomains end-to-end; :mod:`repro.feti.sharded`
+documents the scheme. ``mesh=None`` keeps the single-device behavior
+bit-for-bit.
 """
 from __future__ import annotations
 
@@ -31,13 +44,15 @@ from repro.core import (
     make_assembler,
     shared_envelope,
 )
-from repro.core.autotune import Plan, pattern_fingerprint, plan_from_builder
+from repro.core.autotune import Plan, pattern_fingerprint
+from repro.core.stages import GraphPlan, StageGraph, StageSpec
 from repro.core.stepped import SteppedMeta
 from repro.fem.decomposition import FetiProblem
 from repro.fem.meshgen import structured_mesh
 from repro.fem.regularization import fixing_dofs_regularization
 from repro.feti import dirichlet as dirlib
 from repro.feti import sharded as shlib
+from repro.feti.config import FetiConfig, _coerce_config
 from repro.sparse import (
     block_pattern,
     block_symbolic_cholesky,
@@ -78,6 +93,12 @@ def expand_node_pattern(npat: np.ndarray, ndpn: int) -> np.ndarray:
 class ClusterState:
     """Everything the solution phase needs, stacked over subdomains.
 
+    Stage outputs are keyed by stage name: ``outputs()["dual"]`` is the
+    explicit SC stack ``F``, ``outputs()["dirichlet"]`` the boundary-Schur
+    stack ``Sb``; ``stages`` carries each stage's resolved config,
+    metadata and fill mask (:class:`repro.core.stages.ResolvedStage`) and
+    ``graph_plan`` the joint autotuner result when ``schur="auto"``.
+
     When ``mesh`` is set, the subdomain-stacked device arrays are padded to
     a multiple of the mesh size, sharded over its ``data`` axis, and hold
     *relabeled* multiplier columns (each subdomain's stepped order — see
@@ -90,7 +111,8 @@ class ClusterState:
     plan: Optional[Plan]  # autotuner plan when cfg was "auto", else None
     env: SteppedMeta  # shared stepped envelope (identity column perm)
     block_mask: np.ndarray  # factor block fill mask (shared)
-    node_perm: np.ndarray  # fill-reducing node permutation (shared)
+    node_perm: np.ndarray  # fill-reducing row permutation (shared); equals
+    #                        split.dperm when the interior factor is shared
     index: PackedBlockIndex  # packed block layout derived from block_mask
     # device arrays, leading axis = subdomain:
     # (S, n, n) Cholesky factors of permuted K_reg, or the packed
@@ -110,12 +132,14 @@ class ClusterState:
     mesh: Optional[jax.sharding.Mesh] = None  # set => stacks sharded over it
     n_real: Optional[int] = None  # subdomain count before mesh padding
     relabeled: bool = False  # multiplier columns in stepped (relabeled) order
-    # the compiled (Kp_stack, Btp_stack[, Kd_stack, Zb_stack]) ->
-    # (L, F[, Sb]) preprocessor, for the multi-step regime: new values,
-    # same pattern, zero recompiles (the extra inputs/Sb output exist iff
-    # dirichlet=True; Zb is the own-boundary mask stack)
+    # the compiled preprocessor, for the multi-step regime: new values,
+    # same pattern, zero recompiles. Signature depends on the stage set:
+    #   (Kp, Btp) -> (L, F)                          dual only
+    #   (Kp, Btp, Kd, Zb) -> (L, F, Sb)              + dirichlet
+    #   (Kp, Btp, Kbb, Zb) -> (L, F, Sb)             + dirichlet, shared
+    #                                                  interior factor
     prep: Optional[Callable] = None
-    # ---- Dirichlet preconditioner stage (dirichlet=True), else None ----
+    # ---- Dirichlet preconditioner stage (preconditioner="dirichlet") ----
     split: Optional[dirlib.BoundaryInteriorSplit] = None
     Sb: Optional[jax.Array] = None  # (S, n_b, n_b) primal boundary SCs
     Btb: Optional[jax.Array] = None  # (S, n_b, m_max) boundary rows of B̃ᵀ
@@ -123,6 +147,10 @@ class ClusterState:
     dirichlet_plan: Optional[Plan] = None  # when cfg was "auto", else None
     dirichlet_env: Optional[SteppedMeta] = None  # K_ib stepped metadata
     dirichlet_mask: Optional[np.ndarray] = None  # interior block fill mask
+    # ---- stage graph (redesign) ----
+    stages: Optional[dict] = None  # stage name -> ResolvedStage
+    graph_plan: Optional[GraphPlan] = None  # joint plan when "auto"
+    shared_factor: bool = False  # dirichlet reuses the dual interior factor
 
     @property
     def n_lambda(self) -> int:
@@ -144,12 +172,21 @@ class ClusterState:
         """Factor storage layout actually held ("dense" | "packed")."""
         return "packed" if isinstance(self.L, PackedBlocks) else "dense"
 
+    def outputs(self) -> dict:
+        """Stage outputs keyed by stage name (the stage-graph view)."""
+        out = {"dual": self.F}
+        if self.Sb is not None:
+            out["dirichlet"] = self.Sb
+        return out
+
     def device_bytes(self) -> dict:
         """Device bytes of the persistent solution-phase stacks.
 
         ``K`` is always packed; ``L`` is packed or dense per
         ``cfg.storage``; ``dense_L``/``dense_K`` report what the dense
         (S, n, n) stacks would cost — the packed-vs-dense headline number.
+        ``per_stage`` attributes the persistent bytes to their stage graph
+        node (the factor + lumped K + B̃ᵀ live with the dual stage).
         """
         def nbytes(x):
             if x is None:
@@ -172,6 +209,10 @@ class ClusterState:
         }
         out["total"] = (out["L"] + out["K"] + out["Btp"] + out["F"]
                         + out["Sb"] + out["Btb"])
+        per_stage = {"dual": out["L"] + out["K"] + out["Btp"] + out["F"]}
+        if self.Sb is not None:
+            per_stage["dirichlet"] = out["Sb"] + out["Btb"]
+        out["per_stage"] = per_stage
         return out
 
 
@@ -207,41 +248,41 @@ def batched_assemble(
     return jax.vmap(one)(L, Btp, col_perm, inv_col_perm)
 
 
-def make_cluster_preprocessor(
-    problem: FetiProblem,
-    cfg: Union[SchurAssemblyConfig, str],
-    explicit: bool = True,
-    ordering: str = "nd",
-    measure: str = "auto",
-    plan_cache: bool = True,
-    mesh=None,
-    storage: Optional[str] = None,
-    dirichlet: bool = False,
-):
+def _share_valid(problem: FetiProblem,
+                 split: dirlib.BoundaryInteriorSplit) -> bool:
+    """The interior-factor dedup is valid iff every subdomain's fixing
+    DOFs lie on the (union) boundary: the fixing-DOF regularization then
+    only shifts boundary diagonal entries, so the dual factor's leading
+    (n_i, n_i) principal block is the Cholesky factor of the UNREGULARIZED
+    K_ii — exactly what the Dirichlet stage eliminates against."""
+    bset = np.zeros(split.n, dtype=bool)
+    bset[split.boundary] = True
+    return all(bool(bset[sd.fixing_dofs].all())
+               for sd in problem.subdomains)
+
+
+def make_cluster_preprocessor(problem: FetiProblem, config=None,
+                              **deprecated):
     """Build the COMPILED preprocessing function for one decomposition.
 
-    Returns (static, prep) where ``prep(Kp_stack, Btp_stack) -> (L, F)`` is
-    jitted once per sparsity pattern — the paper's symbolic/numeric split:
-    multi-step simulations recall ``prep`` with new values at zero
-    recompiles. ``static`` carries the host-side symbolic products,
-    including the resolved ``cfg`` and (if autotuned) the ``plan``.
+    ``config`` is a :class:`~repro.feti.config.FetiConfig` (or its
+    coercion sugar: a bare ``SchurAssemblyConfig``, ``"auto"``, ``None``).
+    Pre-FetiConfig keyword arguments still work via ``**deprecated`` but
+    emit a ``DeprecationWarning``.
 
-    ``cfg`` may be the string ``"auto"``: the autotuner
-    (:mod:`repro.core.autotune`) then searches the full variant/block-size
-    space against the cluster's *envelope* metadata — the exact metadata
-    the batched assembler executes with — and the winning plan is cached
-    content-addressed on the sparsity pattern + device kind. ``measure``
-    and ``plan_cache`` are forwarded to :func:`plan_from_builder`.
+    Returns (static, prep) where ``prep`` is jitted once per sparsity
+    pattern — the paper's symbolic/numeric split: multi-step simulations
+    recall ``prep`` with new values at zero recompiles. ``static`` carries
+    the host-side symbolic products, including the resolved per-stage
+    configs and (if autotuned) the joint :class:`GraphPlan`.
 
-    ``dirichlet=True`` grows a second assembly stage: the primal
-    boundary/interior Schur complements S_b = K_bb − K_bi K_ii⁻¹ K_ib of
-    the Dirichlet preconditioner (:mod:`repro.feti.dirichlet`), assembled
-    through the same :func:`repro.core.schur.make_assembler` machinery
-    and finished by the per-subdomain own-boundary restriction. ``prep``
-    then takes ``(Kd_stack, Zb_stack)`` extra inputs (unregularized K in
-    the split's ``dperm`` order + the (S, n_b) own-boundary masks) and
-    returns ``(L, F, Sb)``; with ``cfg="auto"`` the stage gets its own
-    independently-cached plan (``stage="dirichlet"`` in the cache key).
+    Every assembly stage is declared as a :class:`StageSpec` and the set
+    is planned as ONE :class:`StageGraph` when ``schur == "auto"`` — a
+    single joint cache entry covers the dual operator AND the Dirichlet
+    boundary stage. When the factor-sharing conditions hold
+    (:func:`_share_valid`; ``share_factor`` in FetiConfig) the dual rows
+    are ordered ``split.dperm`` and the Dirichlet stage reuses the dual
+    factor's leading principal block instead of factorizing K_ii.
 
     With ``mesh`` set, ``prep`` expects subdomain-sharded stacks whose
     multiplier columns are already relabeled into each subdomain's stepped
@@ -249,6 +290,11 @@ def make_cluster_preprocessor(
     factorization + the ``col_perm=None`` assembler under ``shard_map`` —
     every device processes exactly its slice of subdomains, no exchange.
     """
+    fc = _coerce_config(config, deprecated, "make_cluster_preprocessor")
+    explicit, dirichlet = fc.explicit, fc.dirichlet
+    ordering, storage, mesh = fc.ordering, fc.storage, fc.mesh
+    cfg = fc.schur if fc.schur is not None else SchurAssemblyConfig()
+
     subs = problem.subdomains
     S = len(subs)
     n = subs[0].n
@@ -259,36 +305,43 @@ def make_cluster_preprocessor(
 
     # ---- symbolic phase (host, shared by all subdomains) ----
     nperm = node_ordering(node_shape, ordering)
-
     lmesh = structured_mesh(problem.elems_per_sub)
     npat0 = matrix_pattern_from_elems(n_nodes, lmesh.elems)
-    npat = npat0[nperm][:, nperm]
+    kpat0 = expand_node_pattern(npat0, ndpn)  # original DOF order
     # vector problems: node-blocked DOFs stay adjacent under the expanded
     # permutation, and the DOF pattern is the node pattern with every
     # entry blown up to an (ndpn, ndpn) block — the natural stress case
     # for the block-sparse packed factor layout
-    node_perm = expand_node_perm(nperm, ndpn)
-    kpat = expand_node_pattern(npat, ndpn)
+    fill_perm = expand_node_perm(nperm, ndpn)
+
+    # ---- Dirichlet stage symbolic phase + factor-sharing decision ----
+    # the ONE boundary/interior split: computed here, threaded into every
+    # dirlib consumer (dof_perm/kpat passed down so nothing is rebuilt)
+    split = None
+    share = False
+    if dirichlet:
+        split = dirlib.boundary_interior_split(problem, ordering=ordering,
+                                               dof_perm=fill_perm)
+        if fc.share_factor is not False and split.n_i > 0:
+            ok = _share_valid(problem, split)
+            if fc.share_factor is True and not ok:
+                raise ValueError(
+                    "share_factor=True, but some subdomain's fixing DOFs "
+                    "are interior — the regularization would perturb the "
+                    "shared interior factor. Use share_factor='auto'.")
+            share = ok
+
+    # factor row order: the boundary/interior layout when sharing (the
+    # interior keeps its fill-reducing elimination order, so the leading
+    # principal block of L is the interior factor), the plain
+    # fill-reducing order otherwise
+    node_perm = split.dperm if share else fill_perm
+    kpat = kpat0[node_perm][:, node_perm]
     patterns = [sd.Bt[node_perm] != 0 for sd in subs]
 
-    # ---- Dirichlet stage symbolic phase (shared split + K_ib metadata) ----
-    split = None
-    kpat0 = None
-    _dbuilt: dict = {}
-    if dirichlet:
-        split = dirlib.boundary_interior_split(problem, ordering=ordering)
-        kpat0 = expand_node_pattern(npat0, ndpn)  # original DOF order
-
-    def _dsymbolic(bs: int, rbs: int):
-        key = (bs, rbs)
-        if key not in _dbuilt:
-            _dbuilt[key] = dirlib.dirichlet_symbolic(
-                problem, split, bs, rbs, kpat=kpat0)
-        return _dbuilt[key]
-
-    # builder used both by the autotuner (scoring candidate block sizes)
-    # and below to materialize the symbolic products for the final cfg;
-    # memoized so the winning size isn't analyzed twice
+    # builders used both by the joint planner (scoring candidate block
+    # sizes) and below to materialize the symbolic products for the final
+    # configs; memoized so the winning size isn't analyzed twice
     _built: dict = {}
 
     def _symbolic(bs: int, rbs: int):
@@ -303,54 +356,69 @@ def make_cluster_preprocessor(
             _built[key] = (metas, shared_envelope(metas), mask)
         return _built[key]
 
-    plan = None
-    was_auto = isinstance(cfg, str)
-    if was_auto:
-        if cfg != "auto":
-            raise ValueError("cfg must be a SchurAssemblyConfig or 'auto', "
-                             f"got {cfg!r}")
-        from repro.core import column_pivots
+    _dbuilt: dict = {}
 
-        piv = np.stack([column_pivots(p) for p in patterns])
-        fp = pattern_fingerprint(
+    def _dsymbolic(bs: int, rbs: int):
+        key = (bs, rbs)
+        if key not in _dbuilt:
+            _dbuilt[key] = dirlib.dirichlet_symbolic(
+                problem, split, bs, rbs, kpat=kpat0)
+        return _dbuilt[key]
+
+    # ---- the stage graph: every assembly stage, planned as one unit ----
+    from repro.core import column_pivots
+
+    piv = np.stack([column_pivots(p) for p in patterns])
+    dtype_bytes = np.dtype(fc.dtype).itemsize
+    specs = [StageSpec(
+        name="dual",
+        builder=lambda bs, rbs: _symbolic(bs, rbs)[1:],
+        fingerprint=pattern_fingerprint(
             piv, n, m_max,
-            extra=[kpat.sum(axis=1).astype(np.int64), node_perm])
-        plan = plan_from_builder(
-            lambda bs, rbs: _symbolic(bs, rbs)[1:],
-            fp, n_hint=n,
-            # without explicit assembly only the factorization block size
-            # matters — don't burn timed assembly micro-runs on it
-            measure=measure if explicit else "never",
-            cache=plan_cache, storage=storage)
+            extra=[kpat.sum(axis=1).astype(np.int64), node_perm]),
+        n=n, storage=storage, dtype_bytes=dtype_bytes,
+        # without explicit assembly only the factorization block size
+        # matters — don't burn timed assembly micro-runs on it
+        measure=None if explicit else "never",
+    )]
+    if dirichlet and split.n_i > 0:
+        specs.append(StageSpec(
+            name="dirichlet",
+            builder=_dsymbolic,
+            fingerprint=dirlib.dirichlet_fingerprint(problem, split,
+                                                     kpat=kpat0),
+            n=split.n_i, storage=storage, dtype_bytes=dtype_bytes,
+            share_factor_of="dual" if share else None,
+        ))
+    graph = StageGraph(specs)
+
+    plan = d_plan = gplan = None
+    if fc.auto:
+        gplan = graph.plan(measure=fc.measure, cache=fc.plan_cache)
+        plan = gplan["dual"]
         cfg = plan.cfg
+        d_plan = gplan.plans.get("dirichlet")
     elif storage is not None and storage != cfg.storage:
-        import dataclasses as _dc
-
-        cfg = _dc.replace(cfg, storage=storage)
-
-    # the dirichlet stage's plan: searched (and cached) independently of
-    # the dual stage's — its RHS pattern (K_ib) and factor structure
-    # (interior fill mask) are different inputs to the same design space
-    d_plan = None
+        cfg = dataclasses.replace(cfg, storage=storage)
     d_cfg = None
     if dirichlet:
-        if was_auto and split.n_i > 0:
-            d_plan = plan_from_builder(
-                _dsymbolic,
-                dirlib.dirichlet_fingerprint(problem, split, kpat=kpat0),
-                n_hint=split.n_i, measure=measure, cache=plan_cache,
-                storage=storage, stage="dirichlet")
-            d_cfg = d_plan.cfg
-        else:
-            d_cfg = cfg  # shares the dual stage's (resolved) config
+        d_cfg = d_plan.cfg if d_plan is not None else cfg
 
-    metas, env, block_mask = _symbolic(cfg.block_size, cfg.rhs_bs)
+    cfgs = {"dual": cfg}
+    if "dirichlet" in graph.by_name:
+        cfgs["dirichlet"] = d_cfg
+    resolved = graph.resolve(cfgs, plans=gplan.plans if gplan else None)
+
+    env, block_mask = resolved["dual"].meta, resolved["dual"].mask
+    metas = _built[(cfg.block_size, cfg.rhs_bs)][0]
     index = PackedBlockIndex.from_mask(block_mask, n, cfg.block_size)
     meta_ib = mask_ii = d_assemble = None
     if dirichlet:
-        meta_ib, mask_ii = _dsymbolic(d_cfg.block_size, d_cfg.rhs_bs)
+        if "dirichlet" in resolved:
+            meta_ib = resolved["dirichlet"].meta
+            mask_ii = resolved["dirichlet"].mask
         d_assemble = dirlib.make_dirichlet_assembler(
-            split, meta_ib, mask_ii, d_cfg)
+            split, meta_ib, mask_ii, d_cfg, shared=share)
     col_perms = np.empty((S, m_max), dtype=np.int64)
     inv_col_perms = np.empty((S, m_max), dtype=np.int64)
     for i, me in enumerate(metas):
@@ -369,17 +437,39 @@ def make_cluster_preprocessor(
             lambda A: block_cholesky(A, cfg.block_size, mask=block_mask)
         )(Kp_l)
 
+    ni = split.n_i if split is not None else 0
+
+    def _interior_factor(L):
+        """Leading (n_i, n_i) principal block of the dual factor stack —
+        the shared interior factor. A packed factor densifies transiently
+        inside the compiled program (the slice itself never persists)."""
+        Ld = L.unpack() if isinstance(L, PackedBlocks) else L
+        return Ld[:, :ni, :ni]
+
+    def _dirichlet_stage(L, Kp_l, *dir_l):
+        """The boundary-Schur node of the graph, shared by the local and
+        shard_map preps. ``dir_l`` is (Kbb, Zb) when the interior factor
+        is shared — K_ib is the dual factor input's off-diagonal slice,
+        unperturbed by the boundary-diagonal regularization — and
+        (Kd, Zb) otherwise."""
+        if share:
+            Kbb_l, Zb_l = dir_l
+            Sb = jax.vmap(d_assemble)(
+                _interior_factor(L), Kp_l[:, :ni, ni:], Kbb_l)
+        else:
+            Kd_l, Zb_l = dir_l
+            Sb = jax.vmap(d_assemble)(Kd_l)
+        return jax.vmap(dirlib.restrict_own_boundary)(Sb, Zb_l)
+
     if mesh is None:
 
         if dirichlet:
 
-            def prep(Kp_stack, Btp_stack, Kd_stack, Zb_stack):
+            def prep(Kp_stack, Btp_stack, *dir_stacks):
                 L = _factorize(Kp_stack)
                 F = (batched_assemble(L, Btp_stack, cp, icp, env, cfg,
                                       block_mask) if explicit else None)
-                Sb = jax.vmap(d_assemble)(Kd_stack)
-                Sb = jax.vmap(dirlib.restrict_own_boundary)(Sb, Zb_stack)
-                return L, F, Sb
+                return L, F, _dirichlet_stage(L, Kp_stack, *dir_stacks)
 
         else:
 
@@ -401,10 +491,7 @@ def make_cluster_preprocessor(
                 outs.append(batched_assemble(outs[0], Btp_l, None, None,
                                              env, cfg, block_mask))
             if dirichlet:
-                Kd_l, Zb_l = dir_l
-                Sb_l = jax.vmap(d_assemble)(Kd_l)
-                outs.append(
-                    jax.vmap(dirlib.restrict_own_boundary)(Sb_l, Zb_l))
+                outs.append(_dirichlet_stage(outs[0], Kp_l, *dir_l))
             return tuple(outs)
 
         n_in = 4 if dirichlet else 2
@@ -427,60 +514,60 @@ def make_cluster_preprocessor(
                   col_perm=cp, inv_col_perm=icp, cfg=cfg, plan=plan,
                   index=index, split=split, dirichlet_cfg=d_cfg,
                   dirichlet_plan=d_plan, dirichlet_env=meta_ib,
-                  dirichlet_mask=mask_ii)
+                  dirichlet_mask=mask_ii, graph=graph, graph_plan=gplan,
+                  stages=resolved, share=share)
     return static, jax.jit(prep)
 
 
-def preprocess_cluster(
-    problem: FetiProblem,
-    cfg: Union[SchurAssemblyConfig, str],
-    explicit: bool = True,
-    ordering: str = "nd",
-    dtype=jnp.float64,
-    measure: str = "auto",
-    plan_cache: bool = True,
-    mesh=None,
-    storage: Optional[str] = None,
-    dirichlet: bool = False,
-) -> ClusterState:
+def preprocess_cluster(problem: FetiProblem, config=None,
+                       **deprecated) -> ClusterState:
     """Paper §2.2 'preprocessing': factorize every K_i and (if explicit)
     assemble every F̃ᵢ with the sparsity-utilizing pipeline.
 
-    Pass ``cfg="auto"`` to let the autotuner pick the variant/block-size
-    plan (see :mod:`repro.core.autotune`); the chosen plan is available as
-    ``ClusterState.plan`` and the resolved config as ``ClusterState.cfg``.
+    ``config`` is a :class:`~repro.feti.config.FetiConfig`, or one of its
+    shorthand forms: a bare ``SchurAssemblyConfig``, the string ``"auto"``
+    (the stage graph plans every assembly stage jointly — the chosen plans
+    are available as ``ClusterState.graph_plan`` and the resolved per-stage
+    configs as ``ClusterState.stages``), or ``None`` for defaults.
+    Pre-FetiConfig keyword arguments (``cfg=``, ``explicit=``,
+    ``dirichlet=``, ...) still work but emit a ``DeprecationWarning``.
 
-    ``storage`` overrides the factor storage layout: "packed" keeps every
-    Cholesky factor as a :class:`~repro.sparse.packed.PackedBlocks` stack
-    in the symbolic fill-mask layout (O(S·nnz_blocks) device memory),
-    "dense" keeps (S, n, n) stacks. ``None`` defers to ``cfg.storage``
-    (or, with ``cfg="auto"``, lets the autotuner choose per pattern). The
-    unregularized K kept for the lumped preconditioner is ALWAYS packed —
-    no dense (S, n, n) K survives preprocessing in either mode.
+    ``FetiConfig.storage`` overrides the factor storage layout: "packed"
+    keeps every Cholesky factor as a
+    :class:`~repro.sparse.packed.PackedBlocks` stack in the symbolic
+    fill-mask layout (O(S·nnz_blocks) device memory), "dense" keeps
+    (S, n, n) stacks. ``None`` defers to the assembly config (or lets the
+    planner choose). The unregularized K kept for the lumped
+    preconditioner is ALWAYS packed — no dense (S, n, n) K survives
+    preprocessing in either mode.
 
-    ``dirichlet=True`` additionally assembles (inside the same compiled
-    program) the per-subdomain primal boundary Schur complements
-    S_b = K_bb − K_bi K_ii⁻¹ K_ib of the Dirichlet preconditioner
-    (:mod:`repro.feti.dirichlet`); the state then carries ``Sb``, the
-    boundary-row B̃ᵀ slice ``Btb``, the boundary/interior ``split`` and
-    the stage's own resolved config/plan.
+    ``preconditioner="dirichlet"`` additionally assembles (inside the same
+    compiled program) the per-subdomain primal boundary Schur complements
+    S_b = K_bb − K_bi K_ii⁻¹ K_ib (:mod:`repro.feti.dirichlet`); the state
+    then carries ``Sb``, the boundary-row B̃ᵀ slice ``Btb``, the split and
+    the stage's own resolved config/plan. When the factor-sharing
+    conditions hold (``ClusterState.shared_factor``) the stage reuses the
+    dual factor's interior principal block and the preprocessor streams
+    only the (S, n_b, n_b) unregularized K_bb instead of a full (S, n, n)
+    copy of K.
 
-    Pass ``mesh`` (``("data",)`` axis, :func:`repro.launch.mesh.
-    make_feti_mesh`) to shard the subdomain axis over devices: multipliers
-    are relabeled to stepped column order host-side, the cluster is padded
-    to a multiple of the mesh size with inert identity subdomains, and all
-    stacks land sharded. ``mesh=None`` is bit-for-bit today's behavior.
+    Pass ``FetiConfig(mesh=...)`` (``("data",)`` axis,
+    :func:`repro.launch.mesh.make_feti_mesh`) to shard the subdomain axis
+    over devices: multipliers are relabeled to stepped column order
+    host-side, the cluster is padded to a multiple of the mesh size with
+    inert identity subdomains, and all stacks land sharded. ``mesh=None``
+    is bit-for-bit the single-device behavior.
     """
+    fc = _coerce_config(config, deprecated, "preprocess_cluster")
+    dirichlet, mesh, dtype = fc.dirichlet, fc.mesh, fc.dtype
     subs = problem.subdomains
     S = len(subs)
-    static, prep = make_cluster_preprocessor(
-        problem, cfg, explicit, ordering, measure=measure,
-        plan_cache=plan_cache, mesh=mesh, storage=storage,
-        dirichlet=dirichlet)
+    static, prep = make_cluster_preprocessor(problem, fc)
     cfg = static["cfg"]  # resolved when "auto"/storage override was passed
     node_perm = static["node_perm"]
     index: PackedBlockIndex = static["index"]
     split = static["split"]
+    share = static["share"]
 
     Kreg = np.stack(
         [fixing_dofs_regularization(sd.K, sd.fixing_dofs) for sd in subs]
@@ -493,10 +580,17 @@ def preprocess_cluster(
         # the dirichlet stage eliminates against the UNREGULARIZED K:
         # K_ii is SPD outright (boundary nonempty pins the kernel) and the
         # fixing-DOF diagonal shift would perturb S_b on boundary entries
-        dperm = split.dperm
-        Kd = K_stack[:, dperm][:, :, dperm]
         Btb = np.stack([sd.Bt[split.boundary] for sd in subs])
         Zb = dirlib.own_boundary_masks(problem, split)
+        if share:
+            # shared interior factor: only K_bb is streamed — K_ii and
+            # K_ib already enter through the dual stage's (regularized) K,
+            # whose interior rows the regularization cannot touch
+            bnd = split.boundary
+            Kd = K_stack[:, bnd][:, :, bnd]
+        else:
+            dperm = split.dperm
+            Kd = K_stack[:, dperm][:, :, dperm]
     # the lumped preconditioner's K: unregularized, permuted like the
     # factor so it shares Btp — packed host-side into the fill-mask layout
     K_perm = K_stack[:, node_perm][:, :, node_perm]
@@ -525,7 +619,8 @@ def preprocess_cluster(
         if dirichlet:
             # dummy subdomains: identity K (factorizable interior, S_b = I)
             # glued to nothing (zero Btb, zero own-boundary mask), so they
-            # contribute nothing
+            # contribute nothing; in shared mode the streamed K_bb slice
+            # is identity for the same reason
             Kd = shlib.pad_stack(Kd, S_pad, identity=True)
             Btb = shlib.pad_stack(shlib.relabel_columns(Btb, cp_np), S_pad)
             Zb = shlib.pad_stack(Zb, S_pad)
@@ -584,4 +679,7 @@ def preprocess_cluster(
         dirichlet_plan=static["dirichlet_plan"],
         dirichlet_env=static["dirichlet_env"],
         dirichlet_mask=static["dirichlet_mask"],
+        stages=static["stages"],
+        graph_plan=static["graph_plan"],
+        shared_factor=share,
     )

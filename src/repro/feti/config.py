@@ -1,0 +1,191 @@
+"""The one front-door configuration of the FETI pipeline: ``FetiConfig``.
+
+Before the stage-graph redesign, :class:`~repro.feti.solver.FetiSolver`,
+:func:`~repro.feti.assembly.preprocess_cluster` and the launchers each grew
+their own sprawl of keyword arguments (``cfg``, ``explicit``, ``dirichlet``,
+``ordering``, ``storage``, ``measure``, ``plan_cache``, ``mesh``, ...) that
+had to be threaded in lockstep. This module collapses them into one frozen
+dataclass that every entry point accepts as its single ``config`` argument:
+
+    solver = FetiSolver(problem, FetiConfig(preconditioner="dirichlet"))
+    state  = preprocess_cluster(problem, FetiConfig(schur="auto"))
+
+Coercion sugar (NOT deprecated): ``config`` may also be
+
+  * ``None``                  -> all defaults,
+  * ``"auto"``                -> defaults with ``schur="auto"`` (autotune),
+  * a ``SchurAssemblyConfig`` -> defaults with that assembly config,
+
+so the common one-knob calls stay one-liners. The OLD keyword style
+(``preprocess_cluster(prob, cfg, explicit=False, dirichlet=True)``) still
+works through :func:`_coerce_config` but emits a ``DeprecationWarning``;
+see README §Migrating to FetiConfig for the timeline. CI runs the suite
+under ``-W error::DeprecationWarning`` to prove the repo itself is fully
+on the new API.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Optional, Union
+
+import jax.numpy as jnp
+
+from repro.core.schur import SchurAssemblyConfig
+
+__all__ = ["FetiConfig", "as_feti_config"]
+
+_MODES = ("explicit", "implicit")
+_PRECONDITIONERS = ("lumped", "dirichlet", "none")
+_STORAGES = (None, "dense", "packed")
+_SHARE = ("auto", True, False)
+
+
+@dataclasses.dataclass(frozen=True)
+class FetiConfig:
+    """Everything the FETI pipeline is parameterized by, in one place.
+
+    Attributes:
+      schur: the Schur-assembly configuration — a concrete
+        :class:`~repro.core.schur.SchurAssemblyConfig`, the string
+        ``"auto"`` (the stage graph plans every assembly stage jointly via
+        :class:`repro.core.stages.StageGraph`), or ``None`` for the
+        default config.
+      mode: ``"explicit"`` assembles the dual operators F̃ up front
+        (paper eq. 12); ``"implicit"`` applies them factor-backed
+        (eq. 11).
+      preconditioner: ``"lumped"`` | ``"dirichlet"`` | ``"none"``.
+        ``"dirichlet"`` grows the primal boundary-Schur stage S_b in the
+        same stage graph.
+      ordering: fill-reducing node ordering ("nd" | "rcm" | "natural").
+      storage: factor storage override ("dense" | "packed"); ``None``
+        defers to ``schur.storage`` or lets the planner choose.
+      measure: autotuner measurement policy ("auto" | "never"), forwarded
+        to the joint planner when ``schur == "auto"``.
+      plan_cache: consult/populate the content-addressed plan cache.
+      dtype: device dtype of the numeric stacks.
+      mesh: a ``("data",)`` device mesh to shard the subdomain axis over
+        (:mod:`repro.feti.sharded`); ``None`` = single-device.
+      share_factor: dedupe the interior factorization between the dual
+        and Dirichlet stages when the boundary/interior split aligns with
+        the row ordering (see docs/stage_graph.md §Factor sharing).
+        ``"auto"`` shares whenever valid (every subdomain's fixing DOFs
+        lie on the boundary, so the regularization cannot perturb the
+        shared interior factor); ``True`` requires it (raises if
+        invalid); ``False`` keeps the two independent pipelines.
+    """
+
+    schur: Union[SchurAssemblyConfig, str, None] = None
+    mode: str = "explicit"
+    preconditioner: str = "lumped"
+    ordering: str = "nd"
+    storage: Optional[str] = None
+    measure: str = "auto"
+    plan_cache: bool = True
+    dtype: Any = jnp.float64
+    mesh: Any = None
+    share_factor: Union[str, bool] = "auto"
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}, "
+                             f"got {self.mode!r}")
+        if self.preconditioner not in _PRECONDITIONERS:
+            raise ValueError(f"preconditioner must be one of "
+                             f"{_PRECONDITIONERS}, got "
+                             f"{self.preconditioner!r}")
+        if self.storage not in _STORAGES:
+            raise ValueError(f"storage must be one of {_STORAGES}, "
+                             f"got {self.storage!r}")
+        if isinstance(self.schur, str) and self.schur != "auto":
+            raise ValueError("schur must be a SchurAssemblyConfig, 'auto' "
+                             f"or None, got {self.schur!r}")
+        if self.share_factor not in _SHARE:
+            raise ValueError(f"share_factor must be one of {_SHARE}, "
+                             f"got {self.share_factor!r}")
+
+    # -- derived views used by the preprocessing/solver internals ---------
+
+    @property
+    def explicit(self) -> bool:
+        return self.mode == "explicit"
+
+    @property
+    def dirichlet(self) -> bool:
+        return self.preconditioner == "dirichlet"
+
+    @property
+    def auto(self) -> bool:
+        return self.schur == "auto"
+
+    def resolved_schur(self) -> SchurAssemblyConfig:
+        """The concrete assembly config for non-autotuned runs."""
+        if self.auto:
+            raise ValueError("schur='auto' resolves during preprocessing")
+        return self.schur if self.schur is not None else SchurAssemblyConfig()
+
+    def replace(self, **changes) -> "FetiConfig":
+        return dataclasses.replace(self, **changes)
+
+
+def as_feti_config(config: Union[FetiConfig, SchurAssemblyConfig,
+                                 str, None]) -> FetiConfig:
+    """Coerce the supported ``config`` sugar into a :class:`FetiConfig`.
+
+    Accepts a FetiConfig (returned as-is), a bare SchurAssemblyConfig,
+    the string ``"auto"``, or ``None`` — the blessed shorthand forms, NOT
+    deprecated. Anything else raises.
+    """
+    if config is None:
+        return FetiConfig()
+    if isinstance(config, FetiConfig):
+        return config
+    if isinstance(config, SchurAssemblyConfig) or config == "auto":
+        return FetiConfig(schur=config)
+    raise TypeError("config must be a FetiConfig, a SchurAssemblyConfig, "
+                    f"'auto' or None, got {type(config).__name__}")
+
+
+# old keyword -> (FetiConfig field, value transform)
+_KWARG_MAP = {
+    "cfg": ("schur", lambda v: v),
+    "explicit": ("mode", lambda v: "explicit" if v else "implicit"),
+    "mode": ("mode", lambda v: v),
+    "dirichlet": ("preconditioner",
+                  lambda v: "dirichlet" if v else "lumped"),
+    "preconditioner": ("preconditioner", lambda v: v),
+    "ordering": ("ordering", lambda v: v),
+    "storage": ("storage", lambda v: v),
+    "measure": ("measure", lambda v: v),
+    "plan_cache": ("plan_cache", lambda v: v),
+    "dtype": ("dtype", lambda v: v),
+    "mesh": ("mesh", lambda v: v),
+}
+
+
+def _coerce_config(config, deprecated: dict, caller: str) -> FetiConfig:
+    """Fold pre-FetiConfig keyword arguments into a FetiConfig.
+
+    ``deprecated`` is the ``**kwargs`` dict of an entry point's legacy
+    keywords. Non-empty triggers ONE DeprecationWarning naming the caller
+    and the replacement fields; unknown keywords raise TypeError (same
+    contract a real signature would enforce).
+    """
+    fc = as_feti_config(config)
+    if not deprecated:
+        return fc
+    unknown = sorted(set(deprecated) - set(_KWARG_MAP))
+    if unknown:
+        raise TypeError(f"{caller}() got unexpected keyword argument(s) "
+                        f"{', '.join(map(repr, unknown))}")
+    changes = {}
+    for k, v in deprecated.items():
+        field, conv = _KWARG_MAP[k]
+        changes[field] = conv(v)
+    warnings.warn(
+        f"{caller}({', '.join(sorted(deprecated))}=...) keyword arguments "
+        f"are deprecated; pass FetiConfig({', '.join(sorted(set(changes)))}"
+        f"=...) instead (removal: two releases after 2026-08). "
+        "See README §Migrating to FetiConfig.",
+        DeprecationWarning, stacklevel=3)
+    return fc.replace(**changes)

@@ -122,7 +122,9 @@ class BoundaryInteriorSplit:
 
 
 def boundary_interior_split(
-    problem: FetiProblem, ordering: str = "nd"
+    problem: FetiProblem,
+    ordering: str = "nd",
+    dof_perm: Optional[np.ndarray] = None,
 ) -> BoundaryInteriorSplit:
     """Classify the cluster's local DOFs as boundary (any B̃ᵀ row across
     the cluster's subdomains) vs interior, node-blocked for vector DOFs.
@@ -131,6 +133,13 @@ def boundary_interior_split(
     symbolic products and the compiled program) shared: a superset of one
     subdomain's true boundary only grows its S_b — applying B̃ S_b B̃ᵀ
     still reads exactly the rows that subdomain's B̃ᵀ touches.
+
+    ``dof_perm`` is the expanded fill-reducing DOF permutation. The
+    cluster preprocessor passes the ONE it already computed (the stage
+    graph computes each symbolic product exactly once — this function used
+    to silently rebuild ``node_ordering`` + ``expand_node_perm``, a
+    duplication that could drift); ``dof_perm=None`` rebuilds it from
+    ``ordering`` for standalone use and must produce the identical order.
     """
     subs = problem.subdomains
     n = subs[0].n
@@ -148,11 +157,15 @@ def boundary_interior_split(
         raise ValueError("no boundary DOFs: the decomposition has no "
                          "multipliers, so there is nothing to precondition")
 
-    node_shape = tuple(e + 1 for e in problem.elems_per_sub)
-    nperm = node_ordering(node_shape, ordering)
-    from repro.feti.assembly import expand_node_perm
+    if dof_perm is None:
+        node_shape = tuple(e + 1 for e in problem.elems_per_sub)
+        nperm = node_ordering(node_shape, ordering)
+        from repro.feti.assembly import expand_node_perm
 
-    dof_perm = expand_node_perm(nperm, ndpn)
+        dof_perm = expand_node_perm(nperm, ndpn)
+    elif len(dof_perm) != n:
+        raise ValueError(f"dof_perm has {len(dof_perm)} entries for {n} "
+                         "local DOFs")
     # restriction of the fill-reducing order to the interior subgraph:
     # interior nodes keep their relative elimination order, which preserves
     # the separator structure (and hence the low fill) on the sub-box
@@ -267,7 +280,8 @@ def make_dirichlet_assembler(
     mask_ii: np.ndarray,
     cfg: SchurAssemblyConfig,
     index_ii: Optional[PackedBlockIndex] = None,
-) -> Callable[[jax.Array], jax.Array]:
+    shared: bool = False,
+) -> Callable[..., jax.Array]:
     """Build the per-subdomain S_b assembler (jit/vmap/shard_map friendly).
 
     Returns ``assemble(Kd) -> S_b`` where ``Kd`` is one subdomain's
@@ -275,16 +289,35 @@ def make_dirichlet_assembler(
     dense (n_b, n_b) boundary Schur complement. Factorization storage and
     the TRSM/SYRK schedule follow ``cfg`` — the same knobs as the dual
     assembly, including packed interior factors.
+
+    ``shared=True`` is the stage-graph factor dedup: the interior
+    factorization is ELIDED and the assembler becomes
+    ``assemble(L_ii, Kib, Kbb) -> S_b``, taking the leading (n_i, n_i)
+    principal block of the DUAL stage's factor (valid whenever the dual
+    rows are ordered ``split.dperm`` and the regularization only touches
+    boundary DOFs — then L[:n_i, :n_i] IS the Cholesky factor of the
+    unregularized K_ii). ``L_ii`` arrives dense; a packed ``cfg`` repacks
+    it inside the compiled program via the assembler's storage coercion.
     """
     ni = split.n_i
     if ni == 0:
         # degenerate split (every DOF glued): S_b = K_bb, nothing to solve
+        if shared:
+            return lambda L_ii, Kib, Kbb: Kbb
         return lambda Kd: Kd
 
     packed = cfg.storage == "packed"
     if packed and index_ii is None:
         index_ii = PackedBlockIndex.from_mask(mask_ii, ni, cfg.block_size)
     assembler = make_assembler(meta_ib, cfg, mask_ii)
+
+    if shared:
+
+        def assemble_shared(L_ii: jax.Array, Kib: jax.Array,
+                            Kbb: jax.Array) -> jax.Array:
+            return Kbb - assembler(L_ii, Kib)
+
+        return assemble_shared
 
     def assemble(Kd: jax.Array) -> jax.Array:
         Kii = Kd[:ni, :ni]

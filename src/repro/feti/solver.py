@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Callable, Optional, Union
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core import SchurAssemblyConfig, assembly_flops
 from repro.feti.assembly import ClusterState, preprocess_cluster
+from repro.feti.config import FetiConfig, _coerce_config
 from repro.feti.operator import (
     dirichlet_preconditioner,
     dirichlet_preconditioner_many,
@@ -44,7 +45,7 @@ from repro.feti.projector import build_coarse_problem, coarse_e, coarse_e_many
 from repro.fem.decomposition import FetiProblem
 
 __all__ = ["FetiSolver", "FetiSolution", "FetiManySolution",
-           "PRECONDITIONERS"]
+           "PRECONDITIONERS", "solve_many"]
 
 PRECONDITIONERS = ("lumped", "dirichlet", "none")
 
@@ -103,53 +104,40 @@ class _SolutionOps:
 class FetiSolver:
     """Drives preprocess + PCPG for one cluster (batched subdomains)."""
 
-    def __init__(
-        self,
-        problem: FetiProblem,
-        cfg: Union[SchurAssemblyConfig, str, None] = None,
-        mode: str = "explicit",
-        preconditioner: str = "lumped",
-        ordering: str = "nd",
-        dtype=jnp.float64,
-        measure: str = "auto",
-        plan_cache: bool = True,
-        mesh=None,
-        storage: Optional[str] = None,
-    ):
-        """``cfg`` may also be the string ``"auto"``: the assembly plan is
-        then chosen by the autotuner during :meth:`preprocess` (see
-        :mod:`repro.core.autotune`) and ``self.cfg``/``self.plan`` carry
-        the resolved config and its cost report afterwards. ``measure``
-        and ``plan_cache`` tune that search and are ignored otherwise.
+    def __init__(self, problem: FetiProblem, config=None, **deprecated):
+        """``config`` is a :class:`~repro.feti.config.FetiConfig` or one of
+        its shorthand forms: ``None`` (defaults), a bare
+        ``SchurAssemblyConfig``, or the string ``"auto"`` (the stage graph
+        plans every assembly stage jointly during :meth:`preprocess`;
+        ``self.cfg``/``self.plan`` carry the resolved dual-stage config and
+        its cost report afterwards, ``self.state.graph_plan`` the joint
+        result). The pre-FetiConfig keyword arguments (``cfg=``, ``mode=``,
+        ``preconditioner=``, ``ordering=``, ``dtype=``, ``measure=``,
+        ``plan_cache=``, ``mesh=``, ``storage=``) still work via
+        ``**deprecated`` but emit a ``DeprecationWarning`` — see README
+        §Migrating to FetiConfig.
 
-        ``storage`` ("dense" | "packed" | None) overrides the factor
-        storage layout (see :func:`repro.feti.assembly.preprocess_cluster`);
-        with ``cfg="auto"`` it restricts the autotuner's search to that
-        layout, and ``None`` lets the tuner choose.
-
-        ``mesh`` (a ``("data",)`` device mesh, see
+        ``FetiConfig.mesh`` (a ``("data",)`` device mesh, see
         :func:`repro.launch.mesh.make_feti_mesh`) shards the subdomain
         axis over devices: preprocessing partitions per-device and the
         PCPG operators run under shard_map with psum exchange
-        (:mod:`repro.feti.sharded`). ``mesh=None`` keeps today's
-        single-device batched behavior bit-for-bit."""
-        if mode not in ("explicit", "implicit"):
-            raise ValueError("mode must be 'explicit' or 'implicit'")
-        if preconditioner not in PRECONDITIONERS:
-            raise ValueError(
-                f"preconditioner must be one of {PRECONDITIONERS}, "
-                f"got {preconditioner!r}")
+        (:mod:`repro.feti.sharded`). ``mesh=None`` keeps the single-device
+        batched behavior bit-for-bit."""
+        fc = _coerce_config(config, deprecated, "FetiSolver")
         self.problem = problem
-        self.cfg = cfg if cfg is not None else SchurAssemblyConfig()
+        self.config = fc
+        # resolved views, kept as public attributes for existing callers;
+        # cfg/plan are overwritten with the planner's choice on preprocess
+        self.cfg = fc.schur if fc.schur is not None else SchurAssemblyConfig()
         self.plan = None
-        self.mode = mode
-        self.preconditioner = preconditioner
-        self.ordering = ordering
-        self.dtype = dtype
-        self.measure = measure
-        self.plan_cache = plan_cache
-        self.mesh = mesh
-        self.storage = storage
+        self.mode = fc.mode
+        self.preconditioner = fc.preconditioner
+        self.ordering = fc.ordering
+        self.dtype = fc.dtype
+        self.measure = fc.measure
+        self.plan_cache = fc.plan_cache
+        self.mesh = fc.mesh
+        self.storage = fc.storage
         self.state: Optional[ClusterState] = None
         self.timings: dict = {}
         self._ops: Optional[_SolutionOps] = None
@@ -159,18 +147,7 @@ class FetiSolver:
     # ---- preprocessing (paper §2.2) ----
     def preprocess(self) -> ClusterState:
         t0 = time.perf_counter()
-        self.state = preprocess_cluster(
-            self.problem,
-            self.cfg,
-            explicit=(self.mode == "explicit"),
-            ordering=self.ordering,
-            dtype=self.dtype,
-            measure=self.measure,
-            plan_cache=self.plan_cache,
-            mesh=self.mesh,
-            storage=self.storage,
-            dirichlet=(self.preconditioner == "dirichlet"),
-        )
+        self.state = preprocess_cluster(self.problem, self.config)
         jax.block_until_ready(self.state.L)
         if self.state.F is not None:
             jax.block_until_ready(self.state.F)
@@ -573,8 +550,13 @@ class FetiSolver:
 
             d_flops = assembly_flops(st.dirichlet_env, st.dirichlet_cfg)
             d_flops = dict(d_flops)
-            d_flops["cholesky_ii"] = block_cholesky_flops(
+            chol_ii = block_cholesky_flops(
                 st.split.n_i, st.dirichlet_cfg.block_size, st.dirichlet_mask)
+            # the stage-graph factor dedup elides the interior
+            # factorization — the dual factor already holds it
+            d_flops["cholesky_ii"] = 0.0 if st.shared_factor else chol_ii
+            d_flops["cholesky_ii_saved_by_sharing"] = (
+                chol_ii if st.shared_factor else 0.0)
             d_flops["total"] += d_flops["cholesky_ii"]
         return {
             "amortization_iterations": point,
@@ -588,3 +570,18 @@ class FetiSolver:
             "dirichlet_flops_per_subdomain": d_flops,
             "solve_iter_counts": iter_counts,
         }
+
+
+def solve_many(problem: FetiProblem, loads, config=None, *,
+               tol: float = 1e-9, max_iter: int = 2000,
+               rhs_unit: int = 1) -> FetiManySolution:
+    """One-shot multi-load solve: preprocess once, block-PCPG the batch.
+
+    The functional front door for the server-style workload when no solver
+    object needs to outlive the call: ``solve_many(problem, loads,
+    FetiConfig(...))`` is exactly ``FetiSolver(problem, config)
+    .solve_many(loads, ...)``. Callers streaming many batches against one
+    preprocessing should hold a :class:`FetiSolver` instead.
+    """
+    return FetiSolver(problem, config).solve_many(
+        loads, tol=tol, max_iter=max_iter, rhs_unit=rhs_unit)

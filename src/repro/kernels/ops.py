@@ -20,11 +20,16 @@ from repro.kernels.stepped_trsm import (
     stepped_trsm_packed_pallas,
     stepped_trsm_pallas,
 )
+from repro.kernels.stepped_trsm_syrk import (
+    stepped_trsm_syrk_packed_pallas,
+    stepped_trsm_syrk_pallas,
+)
 
 __all__ = [
     "stepped_trsm",
     "stepped_trsm_packed",
     "stepped_syrk",
+    "stepped_trsm_syrk",
     "invert_diag_blocks",
 ]
 
@@ -124,6 +129,58 @@ def stepped_trsm_packed(L, B: jax.Array, meta: SteppedMeta,
     return Y[:n, :m]
 
 
+def _mirror_lower(Fl: jax.Array, bm: int, m_pad: int, m: int) -> jax.Array:
+    """Mirror the strictly-lower block triangle (diagonal tiles are full)."""
+    nc = m_pad // bm
+    tile_row = jnp.repeat(jnp.arange(nc), bm)
+    strict = tile_row[:, None] > tile_row[None, :]
+    F = Fl + jnp.where(strict, Fl, 0).T
+    return F[:m, :m]
+
+
+def stepped_trsm_syrk(L, B: jax.Array, meta: SteppedMeta,
+                      interpret: bool = False) -> jax.Array:
+    """Fused Pallas TRSM→SYRK: F = (L⁻¹B)ᵀ(L⁻¹B) in ONE kernel, the
+    solution panel staying in VMEM across the stage boundary
+    (stepped_trsm_syrk.py). ``L`` is a dense factor or a
+    :class:`~repro.sparse.packed.PackedBlocks`; dispatches accordingly."""
+    from repro.sparse.packed import PackedBlocks
+
+    bs, bm = meta.block_size, meta.rhs_block_size
+    n, m = meta.n, meta.m
+    m_pad = -(-m // bm) * bm
+    if isinstance(L, PackedBlocks):
+        index = L.index
+        if (index.bs, index.n) != (bs, n):
+            raise ValueError(
+                f"packed index (n={index.n}, bs={index.bs}) does not match "
+                f"stepped meta (n={n}, bs={bs})")
+        n_pad = index.n_pad
+        Bp = _pad_to(B, n_pad, m_pad)
+        starts = jnp.asarray(_start_blocks(meta, bm, bs, m_pad, n_pad))
+        diag = L.values[index.diag_slots]
+        eye = jnp.broadcast_to(jnp.eye(bs, dtype=diag.dtype),
+                               (index.nb, bs, bs))
+        Linv = jax.lax.linalg.triangular_solve(diag, eye, left_side=True,
+                                               lower=True)
+        Fl = stepped_trsm_syrk_packed_pallas(
+            Linv, L.values,
+            jnp.asarray(index.rowptr), jnp.asarray(index.cols),
+            Bp, starts, bs=bs, bm=bm, interpret=interpret)
+    else:
+        n_pad = -(-n // bs) * bs
+        Lp = _pad_to(L, n_pad, n_pad)
+        if n_pad > n:
+            idx = jnp.arange(n, n_pad)
+            Lp = Lp.at[idx, idx].set(1.0)
+        Bp = _pad_to(B, n_pad, m_pad)
+        starts = jnp.asarray(_start_blocks(meta, bm, bs, m_pad, n_pad))
+        Linv = invert_diag_blocks(Lp, bs)
+        Fl = stepped_trsm_syrk_pallas(Linv, Lp, Bp, starts, bs=bs, bm=bm,
+                                      interpret=interpret)
+    return _mirror_lower(Fl, bm, m_pad, m)
+
+
 def stepped_syrk(Y: jax.Array, meta: SteppedMeta,
                  interpret: bool = False) -> jax.Array:
     """Pallas stepped SYRK: full symmetric F = YᵀY (lower computed by the
@@ -135,9 +192,4 @@ def stepped_syrk(Y: jax.Array, meta: SteppedMeta,
     Yp = _pad_to(Y, n_pad, m_pad)
     starts = jnp.asarray(_start_blocks(meta, bm, bs, m_pad, n_pad))
     Fl = stepped_syrk_pallas(Yp, starts, bs=bs, bm=bm, interpret=interpret)
-    # mirror the strictly-lower block triangle (diagonal tiles are full)
-    nc = m_pad // bm
-    tile_row = jnp.repeat(jnp.arange(nc), bm)
-    strict = tile_row[:, None] > tile_row[None, :]
-    F = Fl + jnp.where(strict, Fl, 0).T
-    return F[:m, :m]
+    return _mirror_lower(Fl, bm, m_pad, m)

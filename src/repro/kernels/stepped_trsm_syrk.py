@@ -1,0 +1,233 @@
+"""Pallas TPU megakernel: fused stepped TRSM→SYRK (stage-graph tentpole).
+
+Computes the lower block triangle of ``F = Yᵀ Y`` with ``L Y = B`` solved
+*inside the same kernel*: the TRSM solution panel never round-trips HBM
+between the two stages. The unfused pipeline writes Y once and re-reads it
+``nc`` times (once per SYRK output-tile row); here Y lives in a VMEM
+scratch that persists across grid iterations, so HBM traffic drops to
+factor + B + F.
+
+Schedule (DESIGN.md §2, fused):
+
+  * 2-D grid over (bm × bm) output tiles, row-major — the TPU executes the
+    grid **sequentially** on a core, which is the ordering guarantee the
+    fusion rides on: program (c, 0) first forward-substitutes RHS stripe c
+    into the persistent Y scratch (the stepped ``start_block`` skip
+    applies exactly as in stepped_trsm), and every program (c, j ≤ c) then
+    contracts stripes c and j straight out of VMEM. Stripe j < c was
+    produced by program (j, 0), which precedes (c, j) in row-major order.
+  * Upper-triangle programs (j > c) short-circuit to zero; ops.py mirrors
+    the strict lower triangle, identical to the unfused stepped_syrk.
+  * The k reduction of tile (c, j ≤ c) starts at ``start_block[c]``
+    (pivots sorted ⇒ stripe c's pivot dominates), so the zero region above
+    the steps is neither solved nor contracted.
+
+VMEM budgeting: the persistent scratch holds the full (nc, n, bm) solution
+panel plus the factor (dense (n, n), or the packed value stack in the
+packed variant) — the fused kernel trades VMEM capacity for HBM traffic,
+which is why the autotuner enumerates ``fused`` as a variant instead of
+hard-wiring it (validation sizes fit comfortably; the measured refinement
+keeps it honest at larger ones).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["stepped_trsm_syrk_pallas", "stepped_trsm_syrk_packed_pallas"]
+
+
+def _acc_dtype(dtype):
+    return jnp.float32 if dtype in (jnp.bfloat16, jnp.float16, jnp.float32) else dtype
+
+
+def _syrk_tile(c, j, y_ref, start_ref, out_ref, *, bs: int, nb: int, bm: int):
+    """Contract Y stripes c and j (both already in the VMEM scratch) into
+    the (bm, bm) output tile — the SYRK half shared by both variants.
+
+    ``c``/``j`` are the program ids, hoisted to the kernel top level: a
+    ``pl.program_id`` call inside a ``pl.when`` body is not substituted by
+    the interpreter on this jax version."""
+    acc_t = _acc_dtype(out_ref.dtype)
+    start = start_ref[c]  # pivots sorted => start_c >= start_j for j <= c
+
+    def body(k, acc):
+        rk = pl.ds(k * bs, bs)
+        yc = y_ref[c, rk, :]
+        yj = y_ref[j, rk, :]
+        return acc + jnp.dot(yc.T, yj, preferred_element_type=acc_t)
+
+    acc = jax.lax.fori_loop(start, nb, body, jnp.zeros((bm, bm), acc_t))
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _fused_kernel(meta_ref, linv_ref, l_ref, b_ref, out_ref, y_ref,
+                  *, bs: int, nb: int, bm: int):
+    c = pl.program_id(0)
+    j = pl.program_id(1)
+    acc_t = _acc_dtype(out_ref.dtype)
+
+    @pl.when(j == 0)
+    def _trsm():  # solve stripe c into the persistent scratch
+        start = meta_ref[c]
+        y_ref[c] = jnp.zeros_like(y_ref[c])
+
+        def outer(k, _):
+            rk = pl.ds(k * bs, bs)
+            acc = b_ref[rk, :].astype(acc_t)
+
+            def inner(jj, acc):
+                lkj = l_ref[rk, pl.ds(jj * bs, bs)]
+                yj = y_ref[c, pl.ds(jj * bs, bs), :]
+                return acc - jnp.dot(lkj, yj, preferred_element_type=acc_t)
+
+            acc = jax.lax.fori_loop(start, k, inner, acc)
+            yk = jnp.dot(linv_ref[k], acc, preferred_element_type=acc_t)
+            y_ref[c, rk, :] = yk.astype(y_ref.dtype)
+            return 0
+
+        jax.lax.fori_loop(start, nb, outer, 0)
+
+    @pl.when(j > c)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(j <= c)
+    def _syrk():
+        _syrk_tile(c, j, y_ref, meta_ref, out_ref, bs=bs, nb=nb, bm=bm)
+
+
+def _fused_packed_kernel(meta_ref, rowptr_ref, colidx_ref, linv_ref,
+                         vals_ref, b_ref, out_ref, y_ref,
+                         *, bs: int, nb: int, bm: int):
+    c = pl.program_id(0)
+    j = pl.program_id(1)
+    acc_t = _acc_dtype(out_ref.dtype)
+
+    @pl.when(j == 0)
+    def _trsm():  # packed forward substitution: walk stored blocks only
+        start = meta_ref[c]
+        y_ref[c] = jnp.zeros_like(y_ref[c])
+
+        def outer(k, _):
+            rk = pl.ds(k * bs, bs)
+            acc = b_ref[rk, :].astype(acc_t)
+            t0 = rowptr_ref[k]
+            t1 = rowptr_ref[k + 1] - 1  # diagonal slot is last in the row
+
+            def inner(t, acc):
+                jj = colidx_ref[t]
+                yj = y_ref[c, pl.ds(jj * bs, bs), :]
+                return acc - jnp.dot(vals_ref[t], yj,
+                                     preferred_element_type=acc_t)
+
+            acc = jax.lax.fori_loop(t0, t1, inner, acc)
+            yk = jnp.dot(linv_ref[k], acc, preferred_element_type=acc_t)
+            y_ref[c, rk, :] = yk.astype(y_ref.dtype)
+            return 0
+
+        jax.lax.fori_loop(start, nb, outer, 0)
+
+    @pl.when(j > c)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(j <= c)
+    def _syrk():
+        _syrk_tile(c, j, y_ref, meta_ref, out_ref, bs=bs, nb=nb, bm=bm)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bm", "interpret"))
+def stepped_trsm_syrk_pallas(
+    Linv_diag: jax.Array,  # (nb, bs, bs) pre-inverted diagonal blocks
+    L: jax.Array,  # (n, n) lower factor (padded to bs multiples)
+    B: jax.Array,  # (n, m) stepped RHS (padded to bm multiples)
+    start_block: jax.Array,  # (m // bm,) int32: first factor block per stripe
+    bs: int,
+    bm: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused stepped TRSM→SYRK: lower block triangle of (L⁻¹B)ᵀ(L⁻¹B)."""
+    n, m = B.shape
+    if n % bs or m % bm:
+        raise ValueError("inputs must be padded to block multiples (see ops.py)")
+    nb, nc = n // bs, m // bm
+    if Linv_diag.shape != (nb, bs, bs):
+        raise ValueError(f"Linv_diag shape {Linv_diag.shape} != {(nb, bs, bs)}")
+    if start_block.shape != (nc,):
+        raise ValueError(f"start_block shape {start_block.shape} != {(nc,)}")
+
+    kernel = functools.partial(_fused_kernel, bs=bs, nb=nb, bm=bm)
+    return pl.pallas_call(
+        kernel,
+        grid=(nc, nc),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # start_block
+            pl.BlockSpec((nb, bs, bs), lambda c, j: (0, 0, 0)),  # Linv_diag
+            pl.BlockSpec((n, n), lambda c, j: (0, 0)),  # L (resident)
+            pl.BlockSpec((n, bm), lambda c, j: (0, c)),  # B stripe c
+        ],
+        out_specs=pl.BlockSpec((bm, bm), lambda c, j: (c, j)),
+        out_shape=jax.ShapeDtypeStruct((m, m), B.dtype),
+        scratch_shapes=[pltpu.VMEM((nc, n, bm), B.dtype)],  # persistent Y
+        compiler_params=pltpu.TPUCompilerParams(
+            # the fusion depends on row-major sequential grid execution
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(start_block, Linv_diag, L, B)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bm", "interpret"))
+def stepped_trsm_syrk_packed_pallas(
+    Linv_diag: jax.Array,  # (nb, bs, bs) pre-inverted diagonal blocks
+    values: jax.Array,  # (n_blocks, bs, bs) packed factor blocks
+    rowptr: jax.Array,  # (nb + 1,) int32 CSR row pointers (diag last in row)
+    colidx: jax.Array,  # (n_blocks,) int32 block-column of each slot
+    B: jax.Array,  # (n, m) stepped RHS (padded to block multiples)
+    start_block: jax.Array,  # (m // bm,) int32: first factor block per stripe
+    bs: int,
+    bm: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed-factor fused TRSM→SYRK: VMEM holds the O(nnz_blocks·bs²)
+    value stack plus the persistent Y panel — the biggest-capacity fused
+    configuration."""
+    n, m = B.shape
+    if n % bs or m % bm:
+        raise ValueError("inputs must be padded to block multiples (see ops.py)")
+    nb, nc = n // bs, m // bm
+    n_blocks = values.shape[0]
+    if Linv_diag.shape != (nb, bs, bs):
+        raise ValueError(f"Linv_diag shape {Linv_diag.shape} != {(nb, bs, bs)}")
+    if values.shape != (n_blocks, bs, bs):
+        raise ValueError(f"values shape {values.shape} != {(n_blocks, bs, bs)}")
+    if rowptr.shape != (nb + 1,) or colidx.shape != (n_blocks,):
+        raise ValueError("rowptr/colidx shapes do not match the block index")
+    if start_block.shape != (nc,):
+        raise ValueError(f"start_block shape {start_block.shape} != {(nc,)}")
+
+    kernel = functools.partial(_fused_packed_kernel, bs=bs, nb=nb, bm=bm)
+    return pl.pallas_call(
+        kernel,
+        grid=(nc, nc),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # start_block
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # rowptr
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # colidx
+            pl.BlockSpec((nb, bs, bs), lambda c, j: (0, 0, 0)),  # Linv_diag
+            pl.BlockSpec((n_blocks, bs, bs), lambda c, j: (0, 0, 0)),  # values
+            pl.BlockSpec((n, bm), lambda c, j: (0, c)),  # B stripe c
+        ],
+        out_specs=pl.BlockSpec((bm, bm), lambda c, j: (c, j)),
+        out_shape=jax.ShapeDtypeStruct((m, m), B.dtype),
+        scratch_shapes=[pltpu.VMEM((nc, n, bm), B.dtype)],  # persistent Y
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(start_block, rowptr, colidx, Linv_diag, values, B)

@@ -403,6 +403,16 @@ def feti_cell_counts(fc: FetiArchConfig, shape_name: str, chips: int):
             "stepped_assembly_flops": stepped,
             "cholesky_ii_flops_masked": chol_ii,
             "restriction_flops": restrict,
+            # stage-graph notes (docs/stage_graph.md): when the dual
+            # stage orders DOFs interior-first and the fixing DOFs are
+            # all boundary, the graph reuses the dual factor's leading
+            # block — the K_ii factorization drops out entirely, and
+            # the stage streams K_bb instead of the full permuted K
+            "cholesky_ii_flops_saved_if_shared": chol_ii,
+            "bytes_saved_if_shared": float(S * (n * n - nb * nb) * fb),
+            # the fused TRSM→SYRK megakernel additionally skips the
+            # HBM round-trip of the TRSM result panel Y = L_ii⁻¹ K_ib
+            "fused_intermediate_bytes_skipped": float(S * ni * nb * fb),
         }
     else:  # solve_iter / solve_iter_multi
         from repro.launch.analytic import (

@@ -54,7 +54,13 @@ def main(argv=None) -> int:
                    help="compare against the global sparse solve (and, "
                         "with --devices, against a single-device solve)")
     p.add_argument("--autotune", action="store_true",
-                   help="let the plan autotuner pick the assembly config")
+                   help="let the stage graph's joint planner pick every "
+                        "assembly stage's config (docs/stage_graph.md)")
+    p.add_argument("--fused", action="store_true",
+                   help="use the fused TRSM→SYRK Pallas megakernel "
+                        "(stepped_trsm_syrk) instead of the architecture's "
+                        "two-kernel schedule; ignored with --autotune "
+                        "(the planner already enumerates fused=True)")
     p.add_argument("--storage", choices=("dense", "packed"), default=None,
                    help="factor storage layout: dense (S,n,n) stacks or "
                         "packed block-sparse stacks in the symbolic "
@@ -90,7 +96,7 @@ def main(argv=None) -> int:
     from repro.configs import FetiArchConfig, get_config, get_smoke_config
     from repro.core import SchurAssemblyConfig
     from repro.fem import decompose_problem
-    from repro.feti import FetiSolver
+    from repro.feti import FetiConfig, FetiSolver
     from repro.launch.mesh import make_feti_mesh
 
     mesh = None
@@ -116,15 +122,24 @@ def main(argv=None) -> int:
 
     if args.autotune:
         cfg = "auto"
+    elif args.fused:
+        # the fused megakernel needs Pallas; interpret off-TPU so the
+        # smoke lane exercises the exact kernel logic on CPU
+        cfg = SchurAssemblyConfig(
+            block_size=fc.block_size, rhs_block_size=fc.rhs_block_size,
+            use_pallas=True, fused=True,
+            interpret=jax.devices()[0].platform != "tpu",
+        )
     else:
         cfg = SchurAssemblyConfig(
             trsm_variant=fc.trsm_variant, syrk_variant=fc.syrk_variant,
             block_size=fc.block_size, rhs_block_size=fc.rhs_block_size,
         )
-    solver = FetiSolver(prob, cfg, mode=args.mode,
+    config = FetiConfig(schur=cfg, mode=args.mode,
                         preconditioner=args.precond,
                         plan_cache=not args.no_plan_cache, mesh=mesh,
                         storage=args.storage)
+    solver = FetiSolver(prob, config)
     if args.n_rhs > 0:
         # multi-RHS service: preprocess once, stream a load-case batch
         loads = prob.load_cases(args.n_rhs, kind="sweep")
@@ -140,9 +155,10 @@ def main(argv=None) -> int:
               f"F={by['F']:,} (dense L would be {by['dense_L']:,})")
         if st.Sb is not None:
             sp = st.split
+            shared = " (shared interior factor)" if st.shared_factor else ""
             print(f"[feti] precond=dirichlet: boundary/interior split "
                   f"{sp.n_b}/{sp.n_i} of {sp.n} DOFs, "
-                  f"Sb={by['Sb']:,} Btb={by['Btb']:,} bytes")
+                  f"Sb={by['Sb']:,} Btb={by['Btb']:,} bytes{shared}")
             if st.dirichlet_plan is not None:
                 for line in st.dirichlet_plan.summary().splitlines():
                     print(f"[autotune:dirichlet] {line}")
@@ -183,9 +199,7 @@ def main(argv=None) -> int:
             if err > 1e-6:
                 return 1
             if mesh is not None:
-                ref = FetiSolver(prob, cfg, mode=args.mode,
-                                 preconditioner=args.precond,
-                                 plan_cache=not args.no_plan_cache
+                ref = FetiSolver(prob, config.replace(mesh=None)
                                  ).solve_many(loads, tol=args.tol)
                 du = np.max(np.abs(sol.u_global - ref.u_global))
                 print(f"[feti] sharded vs single-device solve_many: "
@@ -214,9 +228,7 @@ def main(argv=None) -> int:
             # agree only to machine epsilon, so the PCPG stopping test can
             # flip by one iteration near the threshold — allow that single
             # flip there; the solution agreement stays strict either way.
-            ref = FetiSolver(prob, cfg, mode=args.mode,
-                             preconditioner=args.precond,
-                             plan_cache=not args.no_plan_cache
+            ref = FetiSolver(prob, config.replace(mesh=None)
                              ).solve(tol=args.tol)
             du = np.max(np.abs(sol.u_global - ref.u_global))
             print(f"[feti] sharded vs single-device: max|Δu|={du:.2e} "

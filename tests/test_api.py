@@ -1,0 +1,150 @@
+"""Public-API surface tests: the FetiConfig front door, the deprecation
+shim for the pre-FetiConfig keyword style, and golden signature snapshots
+so accidental API drift fails loudly."""
+import dataclasses
+import inspect
+
+import numpy as np
+import pytest
+
+import repro.core
+import repro.feti
+from repro.core import SchurAssemblyConfig
+from repro.fem.decomposition import decompose_elasticity_problem
+from repro.feti import FetiConfig, FetiSolver, as_feti_config
+from repro.feti.assembly import preprocess_cluster
+from repro.feti.config import _coerce_config
+
+
+# ------------------------------------------------------ FetiConfig ----
+
+def test_config_sugar_not_deprecated():
+    """None / "auto" / a bare SchurAssemblyConfig are blessed shorthand."""
+    assert as_feti_config(None) == FetiConfig()
+    assert as_feti_config("auto").schur == "auto"
+    cfg = SchurAssemblyConfig(block_size=8)
+    assert as_feti_config(cfg).schur is cfg
+    fc = FetiConfig(preconditioner="dirichlet")
+    assert as_feti_config(fc) is fc
+    with pytest.raises(TypeError, match="FetiConfig"):
+        as_feti_config(42)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="mode"):
+        FetiConfig(mode="both")
+    with pytest.raises(ValueError, match="preconditioner"):
+        FetiConfig(preconditioner="jacobi")
+    with pytest.raises(ValueError, match="storage"):
+        FetiConfig(storage="sparse")
+    with pytest.raises(ValueError, match="schur"):
+        FetiConfig(schur="fastest")
+    with pytest.raises(ValueError, match="share_factor"):
+        FetiConfig(share_factor="maybe")
+
+
+def test_old_kwargs_warn_and_map():
+    with pytest.warns(DeprecationWarning, match="FetiConfig"):
+        fc = _coerce_config(None, {"explicit": False, "dirichlet": True,
+                                   "ordering": "rcm"}, "caller")
+    assert fc.mode == "implicit"
+    assert fc.preconditioner == "dirichlet"
+    assert fc.ordering == "rcm"
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        _coerce_config(None, {"blocksize": 8}, "caller")
+
+
+def test_old_and_new_style_bit_identical():
+    """Satellite check: the deprecated keyword style routes through the
+    exact same preprocessing as the FetiConfig style — every device stack
+    in the ClusterState is bit-identical."""
+    prob = decompose_elasticity_problem(2, (2, 2), (3, 3))
+    new = preprocess_cluster(
+        prob, FetiConfig(mode="explicit", preconditioner="dirichlet"))
+    with pytest.warns(DeprecationWarning):
+        old = preprocess_cluster(prob, None, explicit=True, dirichlet=True)
+    assert new.cfg == old.cfg
+    assert np.array_equal(np.asarray(new.F), np.asarray(old.F))
+    assert np.array_equal(np.asarray(new.Sb), np.asarray(old.Sb))
+    Ln, Lo = new.L, old.L
+    if hasattr(Ln, "values"):
+        Ln, Lo = Ln.values, Lo.values
+    assert np.array_equal(np.asarray(Ln), np.asarray(Lo))
+    assert np.array_equal(new.node_perm, old.node_perm)
+    assert new.shared_factor == old.shared_factor
+
+    with pytest.warns(DeprecationWarning):
+        s_old = FetiSolver(prob, preconditioner="dirichlet")
+    s_new = FetiSolver(prob, FetiConfig(preconditioner="dirichlet"))
+    assert s_old.config == s_new.config
+
+
+# ------------------------------------------------------ re-exports ----
+
+def test_feti_public_names():
+    expected = {
+        "BoundaryInteriorSplit", "ClusterState", "CoarseProblem",
+        "FetiConfig", "FetiManySolution", "FetiSolution", "FetiSolver",
+        "PCPGManyResult", "PCPGResult", "StageGraph", "StageSpec",
+        "as_feti_config", "assemble_dirichlet_schur",
+        "boundary_interior_split", "build_coarse_problem",
+        "dirichlet_preconditioner", "dirichlet_preconditioner_many",
+        "dual_rhs", "dual_rhs_many", "explicit_dual_apply",
+        "explicit_dual_apply_many", "implicit_dual_apply",
+        "implicit_dual_apply_many", "lumped_preconditioner",
+        "lumped_preconditioner_many", "pcpg", "pcpg_many",
+        "preprocess_cluster", "solve_many",
+    }
+    assert set(repro.feti.__all__) == expected
+    for name in expected:
+        assert hasattr(repro.feti, name), name
+
+
+def test_core_exports_stage_graph():
+    for name in ("StageSpec", "StageGraph", "GraphPlan", "ResolvedStage"):
+        assert name in repro.core.__all__
+        assert hasattr(repro.core, name)
+
+
+# ------------------------------------------- golden signature snapshot ----
+
+def test_entrypoint_signatures_golden():
+    """The redesigned entry points all take (problem, config=None,
+    **deprecated) — one front door, no keyword sprawl."""
+    from repro.feti.assembly import make_cluster_preprocessor
+
+    assert str(inspect.signature(preprocess_cluster)) == (
+        "(problem: 'FetiProblem', config=None, **deprecated) "
+        "-> 'ClusterState'")
+    assert str(inspect.signature(make_cluster_preprocessor)) \
+        == "(problem: 'FetiProblem', config=None, **deprecated)"
+    assert str(inspect.signature(FetiSolver.__init__)) \
+        == "(self, problem: 'FetiProblem', config=None, **deprecated)"
+    assert str(inspect.signature(repro.feti.solve_many)) == (
+        "(problem: 'FetiProblem', loads, config=None, *, "
+        "tol: 'float' = 1e-09, max_iter: 'int' = 2000, "
+        "rhs_unit: 'int' = 1) -> 'FetiManySolution'")
+
+
+def test_feticonfig_fields_golden():
+    fields = {f.name: f for f in dataclasses.fields(FetiConfig)}
+    assert list(fields) == [
+        "schur", "mode", "preconditioner", "ordering", "storage",
+        "measure", "plan_cache", "dtype", "mesh", "share_factor",
+    ]
+    defaults = {n: f.default for n, f in fields.items()
+                if f.default is not dataclasses.MISSING}
+    assert defaults["mode"] == "explicit"
+    assert defaults["preconditioner"] == "lumped"
+    assert defaults["ordering"] == "nd"
+    assert defaults["share_factor"] == "auto"
+    assert FetiConfig.__dataclass_params__.frozen
+
+
+def test_stagespec_fields_golden():
+    from repro.core import StageSpec
+
+    assert [f.name for f in dataclasses.fields(StageSpec)] == [
+        "name", "builder", "fingerprint", "n", "storage", "dtype_bytes",
+        "block_sizes", "share_factor_of", "measure",
+    ]

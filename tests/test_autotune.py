@@ -73,9 +73,13 @@ def test_enumerate_space_canonical():
                         and cfg.syrk_variant == "dense")
         if cfg.storage == "packed":
             assert cfg.trsm_variant == "factor_split"
+        if cfg.fused:
+            assert cfg.use_pallas
     # per block size: 12 dense non-pallas (9 combos + 3 extra prunes)
     # + 8 dense pallas + 3 packed factor_split + 3 packed pallas
-    assert len(space) == 2 * (12 + 8 + 3 + 3)
+    # + 2 fused megakernel (1 dense + 1 packed)
+    assert len(space) == 2 * (12 + 8 + 3 + 3 + 2)
+    assert sum(c.fused for c in space) == 4
     # every variant pair is represented
     pairs = {(c.trsm_variant, c.syrk_variant) for c in space}
     assert len(pairs) == 9
@@ -209,27 +213,29 @@ def test_autotuned_assembly_matches_dense_baseline(tmp_cache):
 def test_preprocess_cluster_auto_end_to_end(tmp_cache):
     """cfg='auto' flows through the cluster path; SCs match the baseline."""
     from repro.fem import decompose_heat_problem
-    from repro.feti import preprocess_cluster
+    from repro.feti import FetiConfig, preprocess_cluster
 
     prob = decompose_heat_problem(2, (2, 2), (4, 4))
-    st = preprocess_cluster(prob, "auto", measure="never")
+    st = preprocess_cluster(prob, FetiConfig(schur="auto",
+                                             measure="never"))
     assert isinstance(st.cfg, SchurAssemblyConfig)
     assert st.plan is not None
     assert st.plan.cfg == st.cfg
     F_ref = jax.vmap(schur_dense_baseline)(st.L, st.Btp)
     assert float(jnp.max(jnp.abs(st.F - F_ref))) < 1e-8
     # second preprocess is a cache hit with the same plan
-    st2 = preprocess_cluster(prob, "auto", measure="never")
+    st2 = preprocess_cluster(prob, FetiConfig(schur="auto",
+                                              measure="never"))
     assert st2.plan.from_cache
     assert st2.cfg == st.cfg
 
 
 def test_solver_accepts_auto(tmp_cache):
     from repro.fem import decompose_heat_problem
-    from repro.feti import FetiSolver
+    from repro.feti import FetiConfig, FetiSolver
 
     prob = decompose_heat_problem(2, (2, 2), (4, 4))
-    solver = FetiSolver(prob, "auto", measure="never")
+    solver = FetiSolver(prob, FetiConfig(schur="auto", measure="never"))
     sol = solver.solve(tol=1e-9)
     assert sol.converged
     assert isinstance(solver.cfg, SchurAssemblyConfig)

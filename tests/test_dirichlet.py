@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.core import SchurAssemblyConfig
 from repro.fem import decompose_problem
-from repro.feti import FetiSolver
+from repro.feti import FetiConfig, FetiSolver
 from repro.feti.assembly import preprocess_cluster
 from repro.feti.dirichlet import (
     assemble_dirichlet_schur,
@@ -206,8 +206,8 @@ def test_restriction_is_noop_for_all_glued_boundary():
 
 @pytest.mark.parametrize("storage", ["dense", "packed"])
 def test_preprocess_carries_dirichlet_state(prob2d, storage):
-    st = preprocess_cluster(prob2d, CFG, explicit=True, storage=storage,
-                            dirichlet=True)
+    st = preprocess_cluster(prob2d, FetiConfig(
+        schur=CFG, storage=storage, preconditioner="dirichlet"))
     split = st.split
     assert st.Sb.shape == (prob2d.n_subdomains, split.n_b, split.n_b)
     assert st.Btb.shape[1] == split.n_b
@@ -226,7 +226,7 @@ def test_preprocess_carries_dirichlet_state(prob2d, storage):
 
 
 def test_preprocess_without_dirichlet_keeps_state_lean(prob2d):
-    st = preprocess_cluster(prob2d, CFG, explicit=True)
+    st = preprocess_cluster(prob2d, CFG)
     assert st.Sb is None and st.Btb is None and st.split is None
     assert st.device_bytes()["Sb"] == 0
 
@@ -234,24 +234,26 @@ def test_preprocess_without_dirichlet_keeps_state_lean(prob2d):
 def test_implicit_mode_still_assembles_dirichlet(prob2d):
     """mode="implicit" skips F but the dirichlet stage still runs (the
     preconditioner is orthogonal to the dual-operator representation)."""
-    st = preprocess_cluster(prob2d, CFG, explicit=False, dirichlet=True)
+    st = preprocess_cluster(prob2d, FetiConfig(
+        schur=CFG, mode="implicit", preconditioner="dirichlet"))
     assert st.F is None and st.Sb is not None
 
 
 def test_solver_guards_state_without_dirichlet(prob2d):
-    solver = FetiSolver(prob2d, CFG, preconditioner="lumped")
+    solver = FetiSolver(prob2d, FetiConfig(schur=CFG))
     solver.preprocess()
     solver.preconditioner = "dirichlet"  # stale state: no Sb
     with pytest.raises(ValueError, match="dirichlet"):
         solver.solve(tol=1e-9)
     with pytest.raises(ValueError, match="preconditioner"):
-        FetiSolver(prob2d, CFG, preconditioner="bogus")
+        FetiSolver(prob2d, FetiConfig(schur=CFG, preconditioner="bogus"))
 
 
 def test_preconditioner_apply_matches_explicit_form(prob2d):
     """dirichlet_preconditioner == the hand-written gather → Btb lift →
     S_b GEMV → restrict → scatter sandwich."""
-    st = preprocess_cluster(prob2d, CFG, explicit=True, dirichlet=True)
+    st = preprocess_cluster(prob2d, FetiConfig(
+        schur=CFG, preconditioner="dirichlet"))
     nl = prob2d.n_lambda
     rng = np.random.default_rng(1)
     w = jnp.asarray(rng.standard_normal(nl))
@@ -273,8 +275,9 @@ def test_preconditioner_apply_matches_explicit_form(prob2d):
 @pytest.mark.parametrize("storage", ["dense", "packed"])
 @pytest.mark.parametrize("mode", ["explicit", "implicit"])
 def test_dirichlet_2d_matches_oracle(prob2d, mode, storage):
-    sol = FetiSolver(prob2d, CFG, mode=mode, preconditioner="dirichlet",
-                     storage=storage).solve(tol=1e-10)
+    sol = FetiSolver(prob2d, FetiConfig(
+        schur=CFG, mode=mode, preconditioner="dirichlet",
+        storage=storage)).solve(tol=1e-10)
     assert sol.converged
     assert _oracle_error(prob2d, sol) <= 1e-8
 
@@ -282,8 +285,9 @@ def test_dirichlet_2d_matches_oracle(prob2d, mode, storage):
 @pytest.mark.elasticity
 @pytest.mark.parametrize("storage", ["dense", "packed"])
 def test_dirichlet_3d_matches_oracle(prob3d, storage):
-    sol = FetiSolver(prob3d, CFG, preconditioner="dirichlet",
-                     storage=storage).solve(tol=1e-10)
+    sol = FetiSolver(prob3d, FetiConfig(
+        schur=CFG, preconditioner="dirichlet",
+        storage=storage)).solve(tol=1e-10)
     assert sol.converged
     assert _oracle_error(prob3d, sol) <= 1e-8
 
@@ -298,8 +302,9 @@ def test_dirichlet_strictly_beats_lumped_on_elasticity(dim, grid, eps):
     lumped on the conditioned elasticity oracle cases (2D and 3D), both
     matching the undecomposed solve."""
     prob = decompose_problem("elasticity", dim, grid, eps)
-    sol_l = FetiSolver(prob, CFG, preconditioner="lumped").solve(tol=1e-10)
-    sol_d = FetiSolver(prob, CFG, preconditioner="dirichlet").solve(tol=1e-10)
+    sol_l = FetiSolver(prob, CFG).solve(tol=1e-10)
+    sol_d = FetiSolver(prob, FetiConfig(
+        schur=CFG, preconditioner="dirichlet")).solve(tol=1e-10)
     assert sol_l.converged and sol_d.converged
     assert sol_d.iterations < sol_l.iterations
     assert _oracle_error(prob, sol_d) <= 1e-8
@@ -307,13 +312,15 @@ def test_dirichlet_strictly_beats_lumped_on_elasticity(dim, grid, eps):
 
 def test_dirichlet_beats_lumped_on_heat():
     prob = decompose_problem("heat", 2, (2, 2), (8, 8))
-    sol_l = FetiSolver(prob, CFG, preconditioner="lumped").solve(tol=1e-10)
-    sol_d = FetiSolver(prob, CFG, preconditioner="dirichlet").solve(tol=1e-10)
+    sol_l = FetiSolver(prob, CFG).solve(tol=1e-10)
+    sol_d = FetiSolver(prob, FetiConfig(
+        schur=CFG, preconditioner="dirichlet")).solve(tol=1e-10)
     assert sol_d.converged and sol_d.iterations < sol_l.iterations
 
 
 def test_amortization_report_accounts_dirichlet_stage(prob2d):
-    solver = FetiSolver(prob2d, CFG, preconditioner="dirichlet")
+    solver = FetiSolver(prob2d, FetiConfig(
+        schur=CFG, preconditioner="dirichlet"))
     solver.preprocess()
     rep = solver.amortization_report(
         t_assembly_s=1.0, t_implicit_iter_s=0.15, t_explicit_iter_s=0.05,
@@ -321,7 +328,13 @@ def test_amortization_report_accounts_dirichlet_stage(prob2d):
     assert rep["amortization_iterations"] == pytest.approx(15.0)
     assert rep["dirichlet_s"] == 0.5
     d = rep["dirichlet_flops_per_subdomain"]
-    assert d is not None and d["total"] > d["cholesky_ii"] > 0
+    assert d is not None and d["total"] > 0
+    if solver.state.shared_factor:
+        # the stage graph deduped the interior factorization entirely
+        assert d["cholesky_ii"] == 0
+        assert d["cholesky_ii_saved_by_sharing"] > 0
+    else:
+        assert d["total"] > d["cholesky_ii"] > 0
 
 
 # --------------------------------------------------------------------------
@@ -332,21 +345,21 @@ def test_amortization_report_accounts_dirichlet_stage(prob2d):
 def test_autotuned_dirichlet_stage_plans_independently(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_PLAN_CACHE_DIR", str(tmp_path))
     prob = decompose_problem("heat", 2, (2, 2), (4, 4))
-    solver = FetiSolver(prob, "auto", preconditioner="dirichlet",
-                        measure="model")
+    solver = FetiSolver(prob, FetiConfig(
+        schur="auto", preconditioner="dirichlet", measure="model"))
     sol = solver.solve(tol=1e-9)
     assert sol.converged
     st = solver.state
     assert st.plan is not None and st.dirichlet_plan is not None
     assert st.plan.key != st.dirichlet_plan.key
     assert st.dirichlet_cfg == st.dirichlet_plan.cfg
-    # both stages' plans are cached on disk under distinct keys
-    cached = {p.name[:-5] for p in tmp_path.iterdir()
-              if p.name.endswith(".json")}
-    assert st.plan.key in cached and st.dirichlet_plan.key in cached
-    # a second preprocess hits the cache for both stages
-    solver2 = FetiSolver(prob, "auto", preconditioner="dirichlet",
-                         measure="model")
+    # both stages live in ONE joint graph cache entry (no per-stage files)
+    assert st.graph_plan is not None
+    cached = {p.name for p in tmp_path.iterdir() if p.name.endswith(".json")}
+    assert cached == {f"graph-{st.graph_plan.key}.json"}
+    # a second preprocess hits the joint entry for both stages
+    solver2 = FetiSolver(prob, FetiConfig(
+        schur="auto", preconditioner="dirichlet", measure="model"))
     solver2.preprocess()
     assert solver2.plan.from_cache
     assert solver2.state.dirichlet_plan.from_cache
@@ -363,10 +376,10 @@ def test_sharded_dirichlet_matches_single_device(prob2d, storage):
     from repro.launch.mesh import make_feti_mesh
 
     mesh = make_feti_mesh()
-    sol_sh = FetiSolver(prob2d, CFG, preconditioner="dirichlet", mesh=mesh,
-                        storage=storage).solve(tol=1e-10)
-    sol1 = FetiSolver(prob2d, CFG, preconditioner="dirichlet",
-                      storage=storage).solve(tol=1e-10)
+    fc = FetiConfig(schur=CFG, preconditioner="dirichlet",
+                    storage=storage)
+    sol_sh = FetiSolver(prob2d, fc.replace(mesh=mesh)).solve(tol=1e-10)
+    sol1 = FetiSolver(prob2d, fc).solve(tol=1e-10)
     assert sol_sh.converged and sol1.converged
     # the shard_map-compiled S_b agrees with the single-device one only to
     # machine epsilon (different XLA schedule), so the stopping test may
@@ -384,8 +397,8 @@ def test_sharded_dirichlet_state_padding(prob2d):
     from repro.launch.mesh import make_feti_mesh
 
     mesh = make_feti_mesh()
-    st = preprocess_cluster(prob2d, CFG, explicit=True, mesh=mesh,
-                            dirichlet=True)
+    st = preprocess_cluster(prob2d, FetiConfig(
+        schur=CFG, mesh=mesh, preconditioner="dirichlet"))
     assert st.Sb.shape[0] % shlib.mesh_size(mesh) == 0
     Sb = np.asarray(st.Sb)
     Btb = np.asarray(st.Btb)
@@ -398,7 +411,8 @@ def test_sharded_dirichlet_state_padding(prob2d):
     w = jnp.asarray(rng.standard_normal(nl))
     out_sh = shlib.dirichlet_preconditioner(
         mesh, st.Sb, st.Btb, st.lambda_ids, nl, w)
-    st1 = preprocess_cluster(prob2d, CFG, explicit=True, dirichlet=True)
+    st1 = preprocess_cluster(prob2d, FetiConfig(
+        schur=CFG, preconditioner="dirichlet"))
     out1 = dirichlet_preconditioner(st1.Sb, st1.Btb, st1.lambda_ids, nl, w)
     np.testing.assert_allclose(np.asarray(out_sh), np.asarray(out1),
                                rtol=1e-12, atol=1e-12)

@@ -28,7 +28,7 @@ from repro.fem import (
     p1_elasticity_stiffness,
     structured_mesh,
 )
-from repro.feti import FetiSolver
+from repro.feti import FetiConfig, FetiSolver
 
 elasticity = pytest.mark.elasticity
 
@@ -76,8 +76,9 @@ def _oracle_error(prob, sol):
 def test_feti_elasticity_2d_matches_oracle(request, precond, fixture, mode,
                                            storage):
     prob = request.getfixturevalue(fixture)
-    sol = FetiSolver(prob, CFG, mode=mode, preconditioner=precond,
-                     storage=storage).solve(tol=1e-10)
+    sol = FetiSolver(prob, FetiConfig(
+        schur=CFG, mode=mode, preconditioner=precond,
+        storage=storage)).solve(tol=1e-10)
     assert sol.converged
     assert _oracle_error(prob, sol) <= 1e-8
     assert sol.alpha.shape == (prob.n_subdomains, 3)
@@ -87,8 +88,9 @@ def test_feti_elasticity_2d_matches_oracle(request, precond, fixture, mode,
 @pytest.mark.parametrize("storage", ["dense", "packed"])
 @pytest.mark.parametrize("precond", ["lumped", "dirichlet"])
 def test_feti_elasticity_3d_matches_oracle(ela3d, storage, precond):
-    sol = FetiSolver(ela3d, CFG, storage=storage,
-                     preconditioner=precond).solve(tol=1e-10)
+    sol = FetiSolver(ela3d, FetiConfig(
+        schur=CFG, storage=storage,
+        preconditioner=precond)).solve(tol=1e-10)
     assert sol.converged
     assert _oracle_error(ela3d, sol) <= 1e-8
     assert sol.alpha.shape == (ela3d.n_subdomains, 6)
@@ -99,10 +101,9 @@ def test_dirichlet_needs_fewer_iterations_than_lumped(ela2d_big):
     """The preconditioner-quality oracle: on the conditioned 8x8
     elasticity case the dirichlet-preconditioned PCPG needs strictly
     fewer iterations than lumped (measured ~30 vs ~44)."""
-    sol_l = FetiSolver(ela2d_big, CFG,
-                       preconditioner="lumped").solve(tol=1e-10)
-    sol_d = FetiSolver(ela2d_big, CFG,
-                       preconditioner="dirichlet").solve(tol=1e-10)
+    sol_l = FetiSolver(ela2d_big, CFG).solve(tol=1e-10)
+    sol_d = FetiSolver(ela2d_big, FetiConfig(
+        schur=CFG, preconditioner="dirichlet")).solve(tol=1e-10)
     assert sol_l.converged and sol_d.converged
     assert sol_d.iterations < sol_l.iterations
     assert _oracle_error(ela2d_big, sol_d) <= 1e-8
@@ -270,9 +271,9 @@ def test_sharded_elasticity_matches_single_device(ela2d, storage):
     from repro.launch.mesh import make_feti_mesh
 
     mesh = make_feti_mesh()
-    sol_sh = FetiSolver(ela2d, CFG, mesh=mesh,
-                        storage=storage).solve(tol=1e-10)
-    sol1 = FetiSolver(ela2d, CFG, storage=storage).solve(tol=1e-10)
+    fc = FetiConfig(schur=CFG, storage=storage)
+    sol_sh = FetiSolver(ela2d, fc.replace(mesh=mesh)).solve(tol=1e-10)
+    sol1 = FetiSolver(ela2d, fc).solve(tol=1e-10)
     assert sol_sh.converged and sol1.converged
     assert sol_sh.iterations == sol1.iterations
     assert np.max(np.abs(sol_sh.u_global - sol1.u_global)) < 1e-9

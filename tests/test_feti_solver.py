@@ -8,7 +8,7 @@ import pytest
 
 from repro.core import SchurAssemblyConfig
 from repro.fem import decompose_problem
-from repro.feti import FetiSolver
+from repro.feti import FetiConfig, FetiSolver
 from repro.feti.assembly import preprocess_cluster
 from repro.feti.operator import explicit_dual_apply, implicit_dual_apply
 
@@ -40,8 +40,9 @@ def _check_against_reference(prob, sol, rtol=1e-6):
 
 @pytest.mark.parametrize("mode", ["explicit", "implicit"])
 def test_feti_2d_matches_global_solve(prob2d, mode):
-    solver = FetiSolver(prob2d, SchurAssemblyConfig(block_size=8, rhs_block_size=8),
-                        mode=mode)
+    solver = FetiSolver(prob2d, FetiConfig(
+        schur=SchurAssemblyConfig(block_size=8, rhs_block_size=8),
+        mode=mode))
     sol = solver.solve(tol=1e-10)
     assert sol.converged
     _check_against_reference(prob2d, sol)
@@ -49,8 +50,9 @@ def test_feti_2d_matches_global_solve(prob2d, mode):
 
 @pytest.mark.parametrize("mode", ["explicit", "implicit"])
 def test_feti_3d_matches_global_solve(prob3d, mode):
-    solver = FetiSolver(prob3d, SchurAssemblyConfig(block_size=8, rhs_block_size=8),
-                        mode=mode)
+    solver = FetiSolver(prob3d, FetiConfig(
+        schur=SchurAssemblyConfig(block_size=8, rhs_block_size=8),
+        mode=mode))
     sol = solver.solve(tol=1e-10)
     assert sol.converged
     _check_against_reference(prob3d, sol)
@@ -59,7 +61,7 @@ def test_feti_3d_matches_global_solve(prob3d, mode):
 def test_explicit_equals_implicit_operator(prob2d):
     """F applied explicitly (preassembled SC) == implicitly (eq. 11 vs 12)."""
     cfg = SchurAssemblyConfig(block_size=8, rhs_block_size=8)
-    st = preprocess_cluster(prob2d, cfg, explicit=True)
+    st = preprocess_cluster(prob2d, cfg)
     nl = prob2d.n_lambda
     rng = np.random.default_rng(0)
     lam = jnp.asarray(rng.standard_normal(nl))
@@ -77,7 +79,7 @@ def test_explicit_equals_implicit_operator(prob2d):
 def test_feti_all_assembly_variants(prob2d, trsm_variant, syrk_variant):
     cfg = SchurAssemblyConfig(trsm_variant=trsm_variant, syrk_variant=syrk_variant,
                               block_size=8, rhs_block_size=8)
-    sol = FetiSolver(prob2d, cfg, mode="explicit").solve(tol=1e-10)
+    sol = FetiSolver(prob2d, cfg).solve(tol=1e-10)
     assert sol.converged
     _check_against_reference(prob2d, sol)
 
@@ -85,15 +87,16 @@ def test_feti_all_assembly_variants(prob2d, trsm_variant, syrk_variant):
 @pytest.mark.parametrize("ordering", ["nd", "rcm", "natural"])
 def test_feti_orderings(prob2d, ordering):
     cfg = SchurAssemblyConfig(block_size=8, rhs_block_size=8)
-    sol = FetiSolver(prob2d, cfg, mode="explicit", ordering=ordering).solve(tol=1e-10)
+    sol = FetiSolver(prob2d, FetiConfig(
+        schur=cfg, ordering=ordering)).solve(tol=1e-10)
     assert sol.converged
     _check_against_reference(prob2d, sol)
 
 
 def test_feti_unpreconditioned_converges(prob2d):
     cfg = SchurAssemblyConfig(block_size=8, rhs_block_size=8)
-    sol = FetiSolver(prob2d, cfg, mode="explicit",
-                     preconditioner="none").solve(tol=1e-10)
+    sol = FetiSolver(prob2d, FetiConfig(
+        schur=cfg, preconditioner="none")).solve(tol=1e-10)
     assert sol.converged
     _check_against_reference(prob2d, sol)
 
@@ -104,8 +107,9 @@ def test_lumped_preconditioner_stays_correct_and_bounded():
     stay correct and not blow up the iteration count."""
     prob = decompose_problem("heat", 2, (3, 3), (4, 4))
     cfg = SchurAssemblyConfig(block_size=8, rhs_block_size=8)
-    sol_pre = FetiSolver(prob, cfg, preconditioner="lumped").solve(tol=1e-9)
-    sol_no = FetiSolver(prob, cfg, preconditioner="none").solve(tol=1e-9)
+    sol_pre = FetiSolver(prob, cfg).solve(tol=1e-9)
+    sol_no = FetiSolver(prob, FetiConfig(
+        schur=cfg, preconditioner="none")).solve(tol=1e-9)
     assert sol_pre.converged and sol_no.converged
     _check_against_reference(prob, sol_pre)
     assert sol_pre.iterations <= 3 * sol_no.iterations

@@ -16,7 +16,7 @@ import pytest
 
 from repro.core import SchurAssemblyConfig
 from repro.fem import decompose_problem
-from repro.feti import FetiSolver
+from repro.feti import FetiConfig, FetiSolver
 
 pytestmark = pytest.mark.multirhs
 
@@ -54,7 +54,7 @@ def _check_oracle(prob, solm, cases):
 @pytest.mark.parametrize("mode", ["explicit", "implicit"])
 def test_solve_many_matches_oracle_2d(prob2d, mode):
     cases = prob2d.load_cases(4, kind="mixed", seed=0)
-    solver = FetiSolver(prob2d, CFG, mode=mode)
+    solver = FetiSolver(prob2d, FetiConfig(schur=CFG, mode=mode))
     solm = solver.solve_many(cases, tol=1e-10)
     _check_oracle(prob2d, solm, cases)
     # the whole point: one preprocess, streamed batches — a second batch
@@ -72,7 +72,8 @@ def test_solve_many_matches_oracle_3d(prob3d):
 @pytest.mark.dirichlet
 def test_solve_many_dirichlet_preconditioner(prob2d):
     cases = prob2d.load_cases(3, kind="mixed", seed=2)
-    solm = FetiSolver(prob2d, CFG, preconditioner="dirichlet").solve_many(
+    solm = FetiSolver(prob2d, FetiConfig(
+        schur=CFG, preconditioner="dirichlet")).solve_many(
         cases, tol=1e-10)
     _check_oracle(prob2d, solm, cases)
 
@@ -206,7 +207,8 @@ def test_sharded_solve_many_matches_single_device(prob2d, mesh):
     near the threshold, so they agree at the achieved-residual level."""
     cases = prob2d.load_cases(4, kind="mixed", seed=6)
     ref = FetiSolver(prob2d, CFG).solve_many(cases, tol=1e-10)
-    sh = FetiSolver(prob2d, CFG, mesh=mesh).solve_many(cases, tol=1e-10)
+    sh = FetiSolver(prob2d, FetiConfig(
+        schur=CFG, mesh=mesh)).solve_many(cases, tol=1e-10)
     assert bool(sh.converged.all())
     du = np.abs(sh.u_global - ref.u_global).max()
     bar = 5e-13 if prob2d.problem == "heat" else 1e-10
@@ -220,7 +222,7 @@ def test_sharded_ragged_batch_roundtrip(prob2d, mesh):
     """Ragged n_rhs (5, not divisible by rhs_unit=4 or the device count)
     pads to 8 columns device-side and round-trips to exactly 5 results."""
     cases = prob2d.load_cases(5, kind="mixed", seed=8)
-    sh = FetiSolver(prob2d, CFG, mesh=mesh).solve_many(
+    sh = FetiSolver(prob2d, FetiConfig(schur=CFG, mesh=mesh)).solve_many(
         cases, tol=1e-10, rhs_unit=4)
     assert sh.n_rhs == 5 and sh.n_rhs_padded == 8
     assert sh.u_global.shape[0] == 5 and sh.lam.shape[0] == 5
@@ -229,7 +231,7 @@ def test_sharded_ragged_batch_roundtrip(prob2d, mesh):
 
 @multidevice
 def test_sharded_single_column_matches_sharded_solve(prob2d, mesh):
-    solver = FetiSolver(prob2d, CFG, mesh=mesh)
+    solver = FetiSolver(prob2d, FetiConfig(schur=CFG, mesh=mesh))
     sol = solver.solve(tol=1e-10)
     solm = solver.solve_many(prob2d.load_stack(), tol=1e-10)
     assert np.array_equal(solm.u_global[0], sol.u_global)

@@ -22,7 +22,7 @@ from repro.core import (
     trsm_factor_split_packed,
 )
 from repro.fem import decompose_problem
-from repro.feti import FetiSolver
+from repro.feti import FetiConfig, FetiSolver
 from repro.feti.assembly import preprocess_cluster
 from repro.feti.operator import (
     dual_rhs,
@@ -269,10 +269,11 @@ def prob2d(case2d):
 def states(case2d):
     prob, precond = case2d
     dirichlet = precond == "dirichlet"
-    return (preprocess_cluster(prob, CFG_D, explicit=True,
-                               dirichlet=dirichlet),
-            preprocess_cluster(prob, CFG_P, explicit=True,
-                               dirichlet=dirichlet))
+    pre = "dirichlet" if dirichlet else "lumped"
+    return (preprocess_cluster(prob, FetiConfig(schur=CFG_D,
+                                                preconditioner=pre)),
+            preprocess_cluster(prob, FetiConfig(schur=CFG_P,
+                                                preconditioner=pre)))
 
 
 def test_packed_state_layout_and_footprint(states):
@@ -350,10 +351,9 @@ def test_packed_solve_matches_dense_iterates(case2d, ordering, mode):
     preconditioner; the dirichlet case runs the 8x8 elasticity grid the
     old floor forced the lumped case to pin at 4x4)."""
     prob, precond = case2d
-    sol_d = FetiSolver(prob, CFG_D, mode=mode, preconditioner=precond,
-                       ordering=ordering).solve(tol=1e-10)
-    sol_p = FetiSolver(prob, CFG_P, mode=mode, preconditioner=precond,
-                       ordering=ordering).solve(tol=1e-10)
+    fc = FetiConfig(mode=mode, preconditioner=precond, ordering=ordering)
+    sol_d = FetiSolver(prob, fc.replace(schur=CFG_D)).solve(tol=1e-10)
+    sol_p = FetiSolver(prob, fc.replace(schur=CFG_P)).solve(tol=1e-10)
     assert sol_d.converged and sol_p.converged
     if precond == "lumped":
         assert sol_d.iterations == sol_p.iterations
@@ -380,8 +380,10 @@ def test_packed_solve_across_block_sizes(case2d, bs):
                                 storage="dense")
     cfg_p = SchurAssemblyConfig(block_size=bs, rhs_block_size=bs,
                                 storage="packed")
-    sol_d = FetiSolver(prob, cfg_d, preconditioner=precond).solve(tol=1e-10)
-    sol_p = FetiSolver(prob, cfg_p, preconditioner=precond).solve(tol=1e-10)
+    sol_d = FetiSolver(prob, FetiConfig(
+        schur=cfg_d, preconditioner=precond)).solve(tol=1e-10)
+    sol_p = FetiSolver(prob, FetiConfig(
+        schur=cfg_p, preconditioner=precond)).solve(tol=1e-10)
     if precond == "lumped":
         assert sol_d.iterations == sol_p.iterations
         np.testing.assert_allclose(sol_p.u_global, sol_d.u_global,
@@ -395,15 +397,17 @@ def test_packed_solve_across_block_sizes(case2d, bs):
 def test_storage_override_knob(prob2d):
     """The storage= knob on preprocess_cluster/FetiSolver overrides the
     config's layout without touching anything else."""
-    st = preprocess_cluster(prob2d, CFG_D, explicit=True, storage="packed")
+    st = preprocess_cluster(prob2d, FetiConfig(schur=CFG_D,
+                                               storage="packed"))
     assert st.storage == "packed" and st.cfg.storage == "packed"
-    solver = FetiSolver(prob2d, CFG_P, storage="dense")
+    solver = FetiSolver(prob2d, FetiConfig(schur=CFG_P, storage="dense"))
     solver.preprocess()
     assert solver.state.storage == "dense"
 
 
 def test_implicit_mode_keeps_packed_factor(prob2d):
-    st = preprocess_cluster(prob2d, CFG_P, explicit=False)
+    st = preprocess_cluster(prob2d, FetiConfig(schur=CFG_P,
+                                               mode="implicit"))
     assert st.F is None
     assert isinstance(st.L, PackedBlocks)
 
@@ -420,10 +424,9 @@ def test_sharded_packed_solve_matches_single_device(case2d, mode):
 
     prob, precond = case2d
     mesh = make_feti_mesh()
-    sol_sh = FetiSolver(prob, CFG_P, mode=mode, preconditioner=precond,
-                        mesh=mesh).solve(tol=1e-10)
-    sol1 = FetiSolver(prob, CFG_P, mode=mode,
-                      preconditioner=precond).solve(tol=1e-10)
+    fc = FetiConfig(schur=CFG_P, mode=mode, preconditioner=precond)
+    sol_sh = FetiSolver(prob, fc.replace(mesh=mesh)).solve(tol=1e-10)
+    sol1 = FetiSolver(prob, fc).solve(tol=1e-10)
     assert sol_sh.converged and sol1.converged
     # dirichlet: the shard_map-compiled S_b matches single-device only to
     # machine epsilon, which can flip the stopping test by one iteration
@@ -438,7 +441,7 @@ def test_sharded_packed_state_is_packed(prob2d):
     from repro.launch.mesh import make_feti_mesh
 
     mesh = make_feti_mesh()
-    st = preprocess_cluster(prob2d, CFG_P, explicit=True, mesh=mesh)
+    st = preprocess_cluster(prob2d, FetiConfig(schur=CFG_P, mesh=mesh))
     assert isinstance(st.L, PackedBlocks)
     assert st.S % shlib.mesh_size(mesh) == 0
     # dummy padding subdomains factorize to identity in packed form too

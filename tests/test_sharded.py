@@ -20,7 +20,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import SchurAssemblyConfig, build_stepped_meta, shared_envelope
 from repro.fem import decompose_problem
-from repro.feti import FetiSolver
+from repro.feti import FetiConfig, FetiSolver
 from repro.feti import sharded as shlib
 from repro.feti.assembly import batched_assemble, preprocess_cluster
 from repro.feti.operator import (
@@ -46,7 +46,7 @@ def prob(request):
 
 @pytest.fixture(scope="module")
 def single(prob):
-    return preprocess_cluster(prob, CFG, explicit=True)
+    return preprocess_cluster(prob, CFG)
 
 
 @pytest.fixture(scope="module")
@@ -56,7 +56,7 @@ def mesh():
 
 @pytest.fixture(scope="module")
 def sharded_state(prob, mesh):
-    return preprocess_cluster(prob, CFG, explicit=True, mesh=mesh)
+    return preprocess_cluster(prob, FetiConfig(schur=CFG, mesh=mesh))
 
 
 def _bt_stack(prob):
@@ -201,7 +201,7 @@ def test_cluster_relabeled_assembly_matches_state(prob, trsm, syrk):
         block_size=8,
         rhs_block_size=8,
     )
-    st1 = preprocess_cluster(prob, cfg, explicit=True)
+    st1 = preprocess_cluster(prob, cfg)
     cp = np.asarray(st1.col_perm)
     Btp_rel = shlib.relabel_columns(np.asarray(st1.Btp), cp)
     F_rel = np.asarray(
@@ -350,8 +350,9 @@ def test_sharded_coarse_problem_matches(prob, mesh, single, sharded_state):
 def test_sharded_solve_matches_single_device(prob, mesh, mode):
     """The acceptance bar: same u_global (to 1e-9) and same iteration count
     as the single-device solve, and both match the undecomposed solve."""
-    sol_sh = FetiSolver(prob, CFG, mode=mode, mesh=mesh).solve(tol=1e-10)
-    sol1 = FetiSolver(prob, CFG, mode=mode).solve(tol=1e-10)
+    fc = FetiConfig(schur=CFG, mode=mode)
+    sol_sh = FetiSolver(prob, fc.replace(mesh=mesh)).solve(tol=1e-10)
+    sol1 = FetiSolver(prob, fc).solve(tol=1e-10)
     assert sol_sh.converged and sol1.converged
     assert sol_sh.iterations == sol1.iterations
     assert np.max(np.abs(sol_sh.u_global - sol1.u_global)) < 1e-9
@@ -377,6 +378,7 @@ def test_sharded_solve_across_mesh_sizes(prob):
     for nd in sorted({2, 3, n_dev}):
         if nd > n_dev:
             continue
-        sol = FetiSolver(prob, CFG, mesh=make_feti_mesh(nd)).solve(tol=1e-10)
+        sol = FetiSolver(prob, FetiConfig(
+            schur=CFG, mesh=make_feti_mesh(nd))).solve(tol=1e-10)
         assert sol.iterations == sol1.iterations
         assert np.max(np.abs(sol.u_global - sol1.u_global)) < 1e-9

@@ -11,7 +11,7 @@ from repro.core import SchurAssemblyConfig
 from repro.data import synthetic_batch
 from repro.distributed import restore_checkpoint, save_checkpoint
 from repro.fem import decompose_heat_problem
-from repro.feti import FetiSolver
+from repro.feti import FetiConfig, FetiSolver
 from repro.models import init_model
 from repro.train import (
     OptimizerConfig,
@@ -32,7 +32,8 @@ def test_paper_pipeline_end_to_end():
     u_ref = prob.reference_solution()
     results = {}
     for mode in ("explicit", "implicit"):
-        sol = FetiSolver(prob, cfg, mode=mode).solve(tol=1e-10)
+        sol = FetiSolver(prob, FetiConfig(
+            schur=cfg, mode=mode)).solve(tol=1e-10)
         assert sol.converged
         np.testing.assert_allclose(sol.u_global, u_ref,
                                    atol=1e-8 * np.abs(u_ref).max())
